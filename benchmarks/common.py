@@ -1,0 +1,24 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall time of fn(*args) with block_until_ready, in seconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name, seconds, **derived):
+    extra = ",".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{seconds * 1e6:.1f},{extra}")

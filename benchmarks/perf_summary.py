@@ -1,0 +1,75 @@
+"""§Perf summary: paper-faithful baseline vs optimized sharding, per cell.
+
+Reads the baseline sweep (reports/dryrun_full.json) and the variant runs
+(reports/hc_*.json, reports/opt_*.json) and prints the before/after table
+embedded in EXPERIMENTS.md. Run after launch/dryrun.py variants exist.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+from benchmarks.analytic import cell_terms
+from benchmarks.roofline import ICI, PEAK, corrected, model_flops_per_chip
+
+
+def _terms(rec, fsdp_mode, chips=None):
+    from repro.configs import registry
+    from repro.models import model as M
+
+    chips = chips or (512 if rec["mesh"] == "2x16x16" else 256)
+    cfg = registry.get(rec["arch"])
+    cell = M.SHAPES[rec["shape"]]
+    _, _, co = corrected(rec)
+    ana = cell_terms(cfg, cell, rec["n_params"], chips, fsdp_mode=fsdp_mode)
+    t = dict(compute=ana.compute_s(), memory=ana.memory_s(),
+             collective=co / ICI)
+    mf = model_flops_per_chip(
+        cfg, {"kind": cell.kind, "global_batch": cell.global_batch,
+              "text_len": M._text_len(cfg, cell.seq_len)},
+        rec["n_params"], chips)
+    dom = max(t.values())
+    t["bound"] = max(t, key=t.get)
+    t["step_lb"] = dom
+    t["mfu"] = (mf / PEAK) / dom if dom else 0.0
+    return t
+
+
+def load_variants():
+    out = {}
+    for f in glob.glob("reports/hc_*_dpfull.json") + glob.glob("reports/opt_*.json"):
+        rec = json.load(open(f))[0]
+        if rec.get("status") != "ok":
+            continue
+        mode = rec.get("fsdp_mode", "full")
+        out[(rec["arch"], rec["shape"], rec["mesh"])] = (rec, mode)
+    return out
+
+
+def main():
+    base = {
+        (r["arch"], r["shape"], r["mesh"]): r
+        for r in json.load(open("reports/dryrun_full.json"))
+        if r["status"] == "ok"
+    }
+    variants = load_variants()
+    rows = ["| arch | shape | mesh | baseline bound / step-LB / MFU | optimized (mode) bound / step-LB / MFU | step-LB gain |",
+            "|---|---|---|---|---|---|"]
+    for key, (rec, mode) in sorted(variants.items()):
+        if key not in base:
+            continue
+        b = _terms(base[key], "full")
+        o = _terms(rec, mode)
+        gain = b["step_lb"] / o["step_lb"] if o["step_lb"] else float("inf")
+        rows.append(
+            f"| {key[0]} | {key[1]} | {key[2]} "
+            f"| {b['bound']} / {b['step_lb']:.3g}s / {b['mfu']*100:.1f}% "
+            f"| ({mode}) {o['bound']} / {o['step_lb']:.3g}s / {o['mfu']*100:.1f}% "
+            f"| **{gain:.1f}×** |")
+    print("\n".join(rows))
+    pathlib.Path("reports/perf_summary.md").write_text("\n".join(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark driver: one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]``
+prints ``name,us_per_call,derived`` CSV rows. The roofline section reads
+reports/dryrun_full.json when present (produced by launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from benchmarks import paper_tables  # noqa: E402
+
+
+SECTIONS = {
+    "fig1": paper_tables.fig1_optimality,
+    "tab1": paper_tables.tab1_duality,
+    "tab2": paper_tables.tab2_presolve,
+    "fig2": paper_tables.fig2_scaling_n,
+    "fig3": paper_tables.fig3_scaling_k,
+    "fig4": paper_tables.fig4_speedup,
+    "fig56": paper_tables.fig56_dd_vs_scd,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SECTIONS))
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes (CI-friendly)")
+    args = ap.parse_args()
+
+    picks = args.only.split(",") if args.only else list(SECTIONS)
+    print("name,us_per_call,derived")
+    quick = {
+        "fig1": lambda: paper_tables.fig1_optimality(n=300, ks=(1, 5, 10)),
+        "tab1": lambda: paper_tables.tab1_duality(n=20_000, ms=(1, 5, 10)),
+        "tab2": lambda: paper_tables.tab2_presolve(ns=(100_000,)),
+        "fig2": lambda: paper_tables.fig2_scaling_n(ns=(50_000, 100_000, 200_000)),
+        "fig3": lambda: paper_tables.fig3_scaling_k(ks=(4, 10, 20), n=50_000),
+        "fig4": lambda: paper_tables.fig4_speedup(n=5_000),
+        "fig56": lambda: paper_tables.fig56_dd_vs_scd(n=5_000),
+    }
+    for name in picks:
+        fn = quick[name] if args.quick else SECTIONS[name]
+        fn()
+
+    # roofline summary (if the dry-run report exists)
+    report = pathlib.Path("reports/dryrun_full.json")
+    if report.exists():
+        from benchmarks import roofline
+        rows = roofline.analyse(str(report))
+        ok = [r for r in rows if r.get("status") == "ok"]
+        if ok:
+            worst = min(ok, key=lambda r: r["mfu_proxy"])
+            best = max(ok, key=lambda r: r["mfu_proxy"])
+            print(f"roofline/cells_ok,{len(ok)},of={len(rows)}")
+            print(f"roofline/best,{best['mfu_proxy']*100:.1f}%,"
+                  f"cell={best['arch']}/{best['shape']}/{best['mesh']}")
+            print(f"roofline/worst,{worst['mfu_proxy']*100:.1f}%,"
+                  f"cell={worst['arch']}/{worst['shape']}/{worst['mesh']}")
+
+
+if __name__ == "__main__":
+    main()

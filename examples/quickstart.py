@@ -1,0 +1,22 @@
+"""Quickstart: solve a generalized knapsack problem in 20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import SolverConfig, solve
+from repro.core.instances import shard_key, sparse_instance
+
+# 100k users, 10 knapsacks, pick at most 2 items per user (§5.1 sparse form)
+kp, q = sparse_instance(shard_key(0), n=100_000, k=10, q=2, tightness=0.4)
+
+res = solve(kp, SolverConfig(algo="scd", reduce="bucketed", max_iters=30), q=q)
+
+print(f"iterations      : {int(res.iters)}")
+print(f"primal objective: {float(res.primal):,.2f}")
+print(f"dual bound      : {float(res.dual):,.2f}")
+print(f"duality gap     : {float(res.dual - res.primal):,.2f} "
+      f"({float((res.dual - res.primal) / res.primal) * 100:.3f}%)")
+viol = jnp.max((res.r - kp.budgets) / kp.budgets)
+print(f"max violation   : {float(viol) * 100:.4f}%  (<= 0 means feasible)")
+print(f"selected items  : {int(res.x.sum()):,} / {kp.p.size:,}")

@@ -1,0 +1,34 @@
+"""End-to-end LM training driver with checkpoint/restart.
+
+Trains a reduced-config model from the zoo for a few hundred steps on the
+synthetic stream, checkpointing every 50 steps; re-running the same
+command resumes from the newest checkpoint (kill it mid-run to see).
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-4b --steps 200
+"""
+import argparse
+
+from repro.configs import registry
+from repro.launch.train import train
+from repro.optim import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch).smoke()
+    _, _, losses = train(
+        cfg, OptConfig(lr=3e-3, warmup=20), steps=args.steps,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50, batch_shape=(4, 128),
+        log_every=20,
+    )
+    print(f"loss: {losses[0]:.3f} -> {sum(losses[-10:]) / 10:.3f} "
+          f"over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

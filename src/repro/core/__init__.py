@@ -1,0 +1,32 @@
+"""The paper's primary contribution: billion-scale GKP solving in JAX.
+
+Public API:
+    types.SparseKP / types.DenseKP / types.SolverConfig — instances + config
+    solver.solve / solver.solve_sharded                 — DD (Alg 2) & SCD (Alg 4)
+    greedy.greedy_solve                                 — Alg 1 (laminar IP, optimal)
+    sparse_scd.candidates_sparse                        — Alg 5 (linear-time map)
+    bucketing.*                                         — §5.2 bucketed reduce
+    postprocess.*                                       — §5.4 feasibility projection
+    moe_router.scd_route                                — the solver as an MoE router
+"""
+from .types import (  # noqa: F401
+    DenseKP,
+    LaminarSets,
+    SolverConfig,
+    SparseKP,
+    cardinality_set,
+    disjoint_partition_sets,
+    hierarchy_from_lists,
+)
+from .greedy import adjusted_profit, consumption, greedy_solve  # noqa: F401
+from .sparse_scd import candidates_sparse, select_sparse  # noqa: F401
+from .scd import candidates_general  # noqa: F401
+from .bucketing import (  # noqa: F401
+    bucket_histogram,
+    exact_threshold,
+    make_edges,
+    threshold_from_hist,
+)
+from .solver import SolveResult, dual_objective, solve, solve_sharded  # noqa: F401
+from .instances import dense_instance, shard_key, sparse_instance  # noqa: F401
+from .moe_router import RouterOut, scd_route, topk_route  # noqa: F401

@@ -1,0 +1,64 @@
+"""Algorithm 1: greedy optimal solver for the per-user IP subproblem.
+
+With laminar (hierarchical) local constraints the per-user subproblem
+
+    max_x  sum_j p~_ij x_ij   s.t.  sum_{j in S_l} x_ij <= C_l,  x in {0,1}
+
+is solved optimally (Proposition 4.1) by keeping, for every set S_l in
+topological (leaf -> root) order, only the top-C_l currently selected items
+ranked by cost-adjusted profit ``p~``.
+
+TPU adaptation: the paper runs a scalar greedy per user inside a Spark
+mapper. Here the whole user shard is solved at once as fixed-shape dense
+linear algebra — ranks come from a double argsort (stable, deterministic
+tie-break by item index), set masks are applied with where(), and the loop
+over the L sets is unrolled at trace time (L is small and static).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["adjusted_profit", "greedy_solve", "consumption", "topc_mask"]
+
+
+def adjusted_profit(p, b, lam):
+    """Cost-adjusted profit p~_ij = p_ij - sum_k lam_k b_ijk.
+
+    p: (..., M), b: (..., M, K), lam: (K,) -> (..., M).
+    """
+    return p - jnp.einsum("...mk,k->...m", b, lam)
+
+
+def topc_mask(score, c):
+    """Boolean mask of the top-``c`` entries of ``score`` along the last axis.
+
+    Deterministic: ties are broken by (stable) ascending item index.
+    ``c`` may be a traced scalar.
+    """
+    order = jnp.argsort(-score, axis=-1, stable=True)      # best first
+    ranks = jnp.argsort(order, axis=-1, stable=True)       # inverse perm
+    return ranks < c
+
+
+def greedy_solve(p_adj, sets, caps):
+    """Algorithm 1, batched. p_adj: (..., M); sets: (L, M) bool; caps: (L,).
+
+    Returns x: (..., M) bool. Rows of ``sets`` must be topo-sorted
+    (leaf -> root; see types.LaminarSets).
+    """
+    x = p_adj > 0
+    neg_inf = jnp.asarray(-jnp.inf, p_adj.dtype)
+    for l in range(sets.shape[0]):
+        mask = sets[l]
+        score = jnp.where(x & mask, p_adj, neg_inf)
+        keep = topc_mask(score, caps[l])
+        x = x & jnp.where(mask, keep, True)
+    return x
+
+
+def consumption(b, x):
+    """Per-user per-knapsack resource use v_ik = sum_j b_ijk x_ij.
+
+    b: (..., M, K), x: (..., M) -> (..., K).
+    """
+    return jnp.einsum("...mk,...m->...k", b, x.astype(b.dtype))

@@ -1,0 +1,74 @@
+"""Synthetic GKP instance generators matching the paper's experiment setup.
+
+Section 6: profits p ~ U[0, 1]; costs b ~ U[0, 1] ("sparse"/default) or a
+50/50 mixture of U[0, 1] and U[0, 10] (Figure 1's diverse items); budgets
+scaled with N, M, L "to ensure tightness"; local caps C_l = 1 by default.
+
+Generation is deterministic per (seed, shard): callers fold the shard index
+into the key, so the data pipeline needs no host-side state and any worker
+can regenerate any shard after a restart (fault-tolerance requirement).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import DenseKP, SparseKP, cardinality_set, disjoint_partition_sets
+
+__all__ = ["sparse_instance", "dense_instance", "shard_key"]
+
+
+def shard_key(seed: int, shard: int = 0) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(seed), shard)
+
+
+def sparse_instance(key, n, k, q=1, tightness=0.5, b_high=1.0):
+    """Section 5.1 sparse instance: one item per knapsack, cap Q per user.
+
+    Budgets: with no global constraint each user takes its top-Q items, so
+    the unconstrained expected use of knapsack k is ~ n * Q/(2K) * E[b].
+    ``tightness`` scales that down so constraints bind (paper §6: budgets
+    scaled to ensure tightness).
+    """
+    kp_, kb = jax.random.split(key)
+    p = jax.random.uniform(kp_, (n, k), jnp.float32)
+    b = jax.random.uniform(kb, (n, k), jnp.float32, 0.0, b_high)
+    budgets = jnp.full((k,), tightness * n * q * (b_high / 2.0) / k, jnp.float32)
+    return SparseKP(p=p, b=b, budgets=budgets), q
+
+
+def dense_instance(key, n, m, k, local="C1", tightness=0.25, mixed_b=False):
+    """General instance (Figure 1 setup).
+
+    local: "C1" (cap 1 over all items), "C2" (cap 2), or "C223"
+    (hierarchical: two disjoint halves capped at 2, root capped at 3).
+    mixed_b: b ~ U[0,1] or U[0,10] with equal probability (Fig 1).
+    """
+    kp_, kb, km = jax.random.split(key, 3)
+    p = jax.random.uniform(kp_, (n, m), jnp.float32)
+    b = jax.random.uniform(kb, (n, m, k), jnp.float32)
+    if mixed_b:
+        wide = jax.random.bernoulli(km, 0.5, (n, m, k))
+        b = jnp.where(wide, b * 10.0, b)
+    if local == "C1":
+        sets = cardinality_set(m, 1)
+        cap_total = 1
+    elif local == "C2":
+        sets = cardinality_set(m, 2)
+        cap_total = 2
+    elif local == "C223":
+        h = m // 2
+        base = disjoint_partition_sets([h, m - h], [2, 2], m)
+        root = cardinality_set(m, 3)
+        sets = type(base)(
+            sets=jnp.concatenate([base.sets, root.sets]),
+            caps=jnp.concatenate([base.caps, root.caps]),
+        )
+        cap_total = 3
+    else:
+        raise ValueError(local)
+    eb = jnp.mean(b)
+    budgets = jnp.full(
+        (k,), tightness * n * cap_total * float(eb) / 1.0, jnp.float32
+    )
+    return DenseKP(p=p, b=b, budgets=budgets, sets=sets.sets, caps=sets.caps)

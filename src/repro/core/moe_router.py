@@ -1,0 +1,139 @@
+"""Capacity-constrained MoE routing as a sparse GKP (the paper inside the LM).
+
+The Section 5.1 sparse knapsack IS expert routing:
+
+    users  = tokens            items = experts (M == K, diagonal costs b=1)
+    p_ik   = router affinity   B_k  = expert k's token capacity
+    Q      = top-k per token   x_ik = token i routed to expert k
+
+A few synchronous-coordinate-descent iterations (Alg 5 map + §5.2 bucketed
+reduce, both pure jnp so GSPMD partitions them across the token shards)
+price each expert with a multiplier lam_k such that realised load respects
+capacity *globally and by construction* — replacing heuristic aux-loss
+balancing. lam is computed under stop_gradient (prices are a dual quantity,
+not a learned parameter); gradients flow through the chosen experts'
+combine weights exactly as in standard top-k routing.
+
+The final assignment applies Alg 1 for the sparse instance (top-Q positive
+adjusted affinities) followed by the §5.4 projection *per expert*: among
+tokens assigned to expert k, keep the capacity-many with the largest
+adjusted affinity (deterministic, fixed shapes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bucketing import bucket_histogram, make_edges, threshold_from_hist
+from .sparse_scd import candidates_sparse
+
+__all__ = ["RouterOut", "scd_route", "topk_route"]
+
+
+class RouterOut(NamedTuple):
+    combine: jnp.ndarray   # (T, E) combine weights (0 where not routed)
+    mask: jnp.ndarray      # (T, E) bool assignment
+    lam: jnp.ndarray       # (E,) expert prices
+    load: jnp.ndarray      # (E,) realised token counts (pre-projection)
+
+
+def _scd_prices(p, capacity, q, iters, bucket_half, bucket_delta, bucket_growth,
+                axis=None):
+    """SCD iterations on the routing GKP. p: (T, E) >= 0, capacity: (E,).
+
+    ``axis``: mesh axis name(s) the token dim is sharded over (inside
+    shard_map); the histogram reduce becomes a psum so expert prices are
+    global even though each shard only sees its own tokens.
+    """
+    ones = jnp.ones_like(p)
+
+    def step(lam, _):
+        v1, v2 = candidates_sparse(p, ones, lam, q)
+        edges = make_edges(lam, bucket_delta, bucket_growth, bucket_half)
+        hist = bucket_histogram(v1, v2, edges)
+        top = jnp.max(v1, axis=0)
+        if axis is not None:
+            hist = jax.lax.psum(hist, axis)
+            top = jax.lax.pmax(top, axis)
+        lam_new = threshold_from_hist(hist, edges, capacity, top)
+        return lam_new, None
+
+    lam0 = jnp.zeros((p.shape[-1],), p.dtype)
+    lam, _ = jax.lax.scan(step, lam0, None, length=iters)
+    return lam
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("q", "capacity_factor", "iters", "bucket_half"),
+)
+def scd_route(logits, q=2, capacity_factor=1.25, iters=4, bucket_half=16,
+              bucket_delta=1e-4, bucket_growth=1.8):
+    """Knapsack-priced top-Q routing with exact expert capacity.
+
+    logits: (T, E). Returns RouterOut with sum(mask, axis=0) <= capacity
+    and sum(mask, axis=1) <= q.
+    """
+    t, e = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # p_ik >= 0
+    capacity = jnp.full((e,), capacity_factor * q * t / e, jnp.float32)
+
+    lam = _scd_prices(jax.lax.stop_gradient(probs), capacity, q, iters,
+                      bucket_half, bucket_delta, bucket_growth)
+    adj = jax.lax.stop_gradient(probs - lam[None, :])
+    # Alg 1 (sparse): top-Q positive adjusted affinities per token.
+    # (ranks are integer decisions: keep sorts out of the grad graph)
+    order = jnp.argsort(-adj, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    mask = (adj > 0) & (ranks < q)
+
+    # §5.4 per-expert projection to hard capacity: keep the capacity-many
+    # best adjusted affinities among assigned tokens (floor: capacity is a
+    # count, an integer rank must stay strictly below it).
+    score = jnp.where(mask, adj, -jnp.inf)
+    erank = jnp.argsort(jnp.argsort(-score, axis=0, stable=True), axis=0, stable=True)
+    mask = mask & (erank < jnp.floor(capacity)[None, :])
+
+    load = jnp.sum(mask, axis=0).astype(jnp.float32)
+    combine = jnp.where(mask, probs, 0.0).astype(logits.dtype)
+    return RouterOut(combine=combine, mask=mask, lam=lam, load=load)
+
+
+def scd_route_shmap(logits, q, capacity_factor, iters, axis):
+    """shard_map variant: logits (T_local, E); capacity and prices are
+    global across ``axis``. Returns (combine, mask) with combine weights
+    renormalised over the chosen experts."""
+    t_local, e = logits.shape
+    n_shards = jax.lax.psum(1, axis)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    capacity = jnp.full((e,), capacity_factor * q * t_local / e, jnp.float32)
+    capacity = capacity * n_shards                          # global budget
+    # stop_gradient on the INPUT too: prices must be entirely off the AD
+    # path (pmax/psum inside the scan have no/expensive transpose rules)
+    lam = _scd_prices(jax.lax.stop_gradient(probs), capacity, q, iters,
+                      16, 1e-4, 1.8, axis=axis)
+    adj = jax.lax.stop_gradient(probs - lam[None, :])
+    order = jnp.argsort(-adj, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    mask = (adj > 0) & (ranks < q)
+    combine = jnp.where(mask, probs, 0.0)
+    denom = jnp.maximum(combine.sum(-1, keepdims=True), 1e-9)
+    return (combine / denom).astype(logits.dtype), mask
+
+
+@functools.partial(jax.jit, static_argnames=("q",))
+def topk_route(logits, q=2):
+    """Baseline heuristic top-k routing (no capacity guarantee)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    order = jnp.argsort(jax.lax.stop_gradient(-probs), axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    mask = ranks < q
+    load = jnp.sum(mask, axis=0).astype(jnp.float32)
+    combine = jnp.where(mask, probs, 0.0).astype(logits.dtype)
+    return RouterOut(
+        combine=combine, mask=mask,
+        lam=jnp.zeros((logits.shape[-1],), jnp.float32), load=load,
+    )

@@ -1,0 +1,81 @@
+"""Section 5.4: post-processing for feasibility.
+
+Groups are ranked by their cost-adjusted group profit
+
+    p~_i = sum_j p_ij x_ij - sum_k lam_k sum_j b_ijk x_ij
+
+(the dual value contributed by group i) and zeroed out in ascending order
+until every global constraint holds.
+
+Distributed adaptation: the paper sorts groups globally — a full shuffle.
+We reuse the Section 5.2 machinery instead: histogram group profits against
+a fixed edge ladder, psum the (K, E) per-knapsack removable-consumption
+histogram, and pick the smallest edge tau such that removing every group
+with p~_i <= tau restores feasibility for ALL knapsacks. Because the
+removal set is exactly "buckets below an edge", the removed consumption is
+exactly the histogram prefix sum — the projection is conservative-exact
+(always feasible), only the removal granularity is bucketed. An exact
+sort-based mode is kept for single-shard use and tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["group_profit", "feasibility_threshold_exact", "feasibility_threshold_bucketed"]
+
+
+def group_profit(p, cons, lam, x):
+    """p~_i for a shard. p: (n, M), cons: (n, K), lam: (K,), x: (n, M)."""
+    gain = jnp.einsum("nm,nm->n", p, x.astype(p.dtype))
+    price = jnp.einsum("nk,k->n", cons, lam)
+    return gain - price
+
+
+def feasibility_threshold_exact(ptilde, cons, budgets):
+    """Minimal prefix (ascending p~) whose removal restores feasibility.
+
+    Returns tau; zero out groups with p~_i <= tau. Single shard / test path.
+    """
+    order = jnp.argsort(ptilde, stable=True)
+    sorted_p = ptilde[order]
+    csum = jnp.cumsum(cons[order], axis=0)                 # (n, K)
+    total = csum[-1]
+    excess = jnp.maximum(total - budgets, 0.0)             # (K,)
+    ok = jnp.all(csum >= excess[None, :], axis=-1)         # (n,)
+    n = ptilde.shape[0]
+    first_ok = jnp.argmax(ok)                              # minimal prefix end
+    need = jnp.any(excess > 0)
+    tau = jnp.where(need, sorted_p[first_ok], -jnp.inf)
+    return tau
+
+
+def feasibility_threshold_bucketed(ptilde, cons, r_total, budgets, axis=None, n_edges=512):
+    """Distributed tau via histogramming; guaranteed feasible removal.
+
+    ptilde: (n,), cons: (n, K) shard-local; r_total: (K,) global consumption
+    (already psum'd); axis: mesh axis name(s) for the collectives.
+    """
+    k = cons.shape[-1]
+    lo = jnp.min(ptilde)
+    hi = jnp.max(ptilde)
+    if axis is not None:
+        lo = jax.lax.pmin(lo, axis)
+        hi = jax.lax.pmax(hi, axis)
+    edges = jnp.linspace(lo, hi, n_edges)                  # (E,)
+    idx = jnp.searchsorted(edges, ptilde, side="left")     # bucket i: (e[i-1], e[i]]
+    nb = n_edges + 1
+    seg = idx[:, None] + jnp.arange(k)[None, :] * nb
+    hist = jax.ops.segment_sum(
+        cons.reshape(-1), seg.reshape(-1), num_segments=k * nb
+    ).reshape(k, nb)
+    if axis is not None:
+        hist = jax.lax.psum(hist, axis)
+    excess = jnp.maximum(r_total - budgets, 0.0)
+    # Removing {i : p~_i <= edges[e]} removes exactly cum[k, e].
+    cum = jnp.cumsum(hist[:, :n_edges], axis=-1)           # (K, E)
+    feas_e = jnp.all(cum >= excess[:, None], axis=0)       # (E,)
+    need = jnp.any(excess > 0)
+    e_star = jnp.argmax(feas_e)                            # minimal feasible edge
+    tau = jnp.where(need, edges[e_star], -jnp.inf)
+    return tau

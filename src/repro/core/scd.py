@@ -1,0 +1,83 @@
+"""Algorithms 3 + 4 (map side): SCD candidate generation for the general GKP.
+
+For coordinate k, each item j defines a line in the (lam_k, z) plane:
+
+    z_j(lam_k) = a_j - lam_k * b_jk,
+    a_j        = p_j - sum_{k' != k} lam_k' b_jk'.
+
+The greedy solution (Alg 1) depends only on the *order* of the z_j and
+their signs, so it can only change at (1) pairwise line intersections and
+(2) zero crossings (Alg 3). The map evaluates the greedy solution at every
+candidate, sweeping lam_k downward, and emits the *incremental* consumption
+(v1 = candidate value, v2 = consumption increase) exactly as Alg 4's Map.
+
+Candidate count per user per coordinate: P = M(M-1)/2 + M (M is small; the
+billion-scale path is the sparse Alg 5). Everything is batched over the
+user shard; the per-candidate greedy re-solve is vmapped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .greedy import adjusted_profit, greedy_solve
+
+__all__ = ["candidates_general", "num_candidates"]
+
+
+def num_candidates(m: int) -> int:
+    return m * (m - 1) // 2 + m
+
+
+def _pair_indices(m):
+    iu, ju = jnp.triu_indices(m, k=1)
+    return iu, ju
+
+
+def candidates_general(p, b, lam, sets, caps):
+    """Algorithm 3 + Alg 4 map, batched. Returns (v1, v2): (n, K, P).
+
+    p: (n, M), b: (n, M, K), lam: (K,). Invalid candidates are encoded as
+    v1 = -1, v2 = 0.
+    """
+    n, m = p.shape
+    k = lam.shape[0]
+    pa = adjusted_profit(p, b, lam)                        # (n, M)
+    iu, ju = _pair_indices(m)
+
+    def per_k(kk):
+        slope = b[:, :, kk]                                # (n, M)
+        a = pa + lam[kk] * slope                           # intercepts (n, M)
+        # (1) pairwise intersections.
+        da = a[:, iu] - a[:, ju]
+        db = slope[:, iu] - slope[:, ju]
+        inter = jnp.where(jnp.abs(db) > 1e-12, da / jnp.where(db == 0, 1.0, db), -1.0)
+        # (2) zero crossings.
+        zero = jnp.where(slope > 1e-12, a / jnp.where(slope <= 1e-12, 1.0, slope), -1.0)
+        cand = jnp.concatenate([inter, zero], axis=-1)     # (n, P)
+        cand = jnp.where(jnp.isfinite(cand) & (cand >= 0.0), cand, -1.0)
+
+        # Alg 4 map: sweep candidates in decreasing order, emit increments.
+        cand_sorted = -jnp.sort(-cand, axis=-1)            # desc (n, P)
+
+        def cons_at(c):
+            # c: (n,) candidate lam_k. Sample the LEFT limit lam_k = c - eps:
+            # the items that activate exactly at c must be attributed to c
+            # (their mass belongs to every threshold v <= c), otherwise the
+            # reduce under-predicts consumption by ~1 item per user and the
+            # chosen lam systematically violates the budget.
+            c_eff = c - 1e-5 * (1.0 + jnp.abs(c))
+            padj = pa + (lam[kk] - c_eff)[:, None] * slope
+            x = greedy_solve(padj, sets, caps)
+            return jnp.einsum("nm,nm->n", slope, x.astype(slope.dtype))
+
+        cons = jax.vmap(cons_at, in_axes=1, out_axes=1)(cand_sorted)  # (n, P)
+        prev = jnp.concatenate([jnp.zeros((n, 1), cons.dtype), cons[:, :-1]], axis=-1)
+        inc = cons - prev
+        valid = (cand_sorted >= 0.0) & (inc > 0.0)
+        v1 = jnp.where(valid, cand_sorted, -1.0)
+        v2 = jnp.where(valid, inc, 0.0)
+        return v1, v2
+
+    v1, v2 = jax.vmap(per_k, out_axes=1)(jnp.arange(k))    # (n, K, P)
+    return v1, v2

@@ -1,0 +1,68 @@
+"""Section 5.1 / Algorithm 5: linear-time candidate generation (sparse GKP).
+
+Sparse form: M == K, item k consumes only knapsack k (b[i,k] on the
+diagonal), one local constraint "choose at most Q items per user". Each
+user emits at most one candidate per knapsack:
+
+  * adjusted_profits[k] = max(p_ik - lam_k * b_ik, 0)
+  * pbar = (Q+1)-th largest if item k is currently in the top-Q, else the
+    Q-th largest — the profit level item k has to beat to (stay) in.
+  * if p_ik > pbar:  candidate v1 = (p_ik - pbar) / b_ik, mass v2 = b_ik.
+
+TPU adaptation: the paper uses quick_select (O(K) average, data-dependent
+control flow) inside a scalar mapper. Quick-select does not vectorise on a
+systolic/VPU machine; ``jax.lax.top_k`` over the K axis gives the same two
+order statistics for the whole user shard at once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["candidates_sparse", "select_sparse", "consumption_sparse"]
+
+
+def candidates_sparse(p, b, lam, q):
+    """Algorithm 5, batched over the user shard.
+
+    p, b: (n, K); lam: (K,); q: static int. Returns (v1, v2): (n, K) each.
+    Invalid candidates are encoded as v1 = -1, v2 = 0 (sort below real
+    candidates in the exact reduce; zero mass in the bucketed reduce).
+    """
+    n, k = p.shape
+    ap = jnp.maximum(p - lam[None, :] * b, 0.0)            # (n, K)
+    if q >= k:
+        # Local constraint can never bind: the only candidate is the zero
+        # crossing (pbar = 0).
+        pbar = jnp.zeros_like(ap)
+    else:
+        top, _ = jax.lax.top_k(ap, q + 1)                  # (n, q+1) desc
+        q_th = top[:, q - 1] if q >= 1 else jnp.full((n,), jnp.inf, ap.dtype)
+        q1_th = top[:, q]
+        in_top = ap >= q_th[:, None]
+        pbar = jnp.where(in_top, q1_th[:, None], q_th[:, None])
+    valid = (p > pbar) & (b > 0)
+    v1 = jnp.where(valid, (p - pbar) / jnp.where(b > 0, b, 1.0), -1.0)
+    v2 = jnp.where(valid, b, 0.0)
+    return v1, v2
+
+
+def select_sparse(p, b, lam, q):
+    """Primal solution at multipliers lam: top-Q positive adjusted profits.
+
+    Matches Algorithm 1 for the sparse instance (single cardinality set).
+    Returns x: (n, K) bool.
+    """
+    ap = p - lam[None, :] * b
+    n, k = p.shape
+    if q >= k:
+        return ap > 0
+    # top-q mask by adjusted profit, ties broken by item index (stable).
+    order = jnp.argsort(-ap, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    return (ap > 0) & (ranks < q)
+
+
+def consumption_sparse(b, x):
+    """Per-knapsack use of one shard: R_k = sum_i b_ik x_ik. -> (K,)"""
+    return jnp.einsum("nk,nk->k", b, x.astype(b.dtype))

@@ -1,0 +1,139 @@
+"""Problem containers for the generalized knapsack problem (GKP).
+
+Paper: "Solving Billion-Scale Knapsack Problems" (WWW'20), eqs. (1)-(4).
+
+Two instance families are first-class:
+
+* ``DenseKP`` — the general form: N users x M items, K global knapsacks with
+  dense cost tensor ``b[i, j, k]`` and laminar (hierarchical) local
+  constraints described by boolean index-set masks.
+* ``SparseKP`` — the Section 5.1 sparse form: M == K, one item per knapsack
+  (``b[i, j, k] = 0`` for j != k, stored as the diagonal ``b[i, k]``) and a
+  single cardinality local constraint (choose at most Q items per user).
+
+Both are NamedTuples of arrays, hence JAX pytrees: they can be sharded,
+donated and passed through jit/shard_map directly. Static structure
+(number of local constraints, Q) travels separately as Python ints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class LaminarSets(NamedTuple):
+    """Hierarchical local constraints (Definition 2.1).
+
+    ``sets`` is an (L, M) boolean mask matrix; row l is the index set S_l.
+    Rows MUST be in topological (leaf -> root) order: if S_a is a strict
+    subset of S_b then a < b. ``caps`` is the (L,) int32 vector of C_l.
+    """
+
+    sets: jnp.ndarray  # (L, M) bool
+    caps: jnp.ndarray  # (L,) int32
+
+
+class DenseKP(NamedTuple):
+    """General GKP shard: ``p`` (n, M) profits, ``b`` (n, M, K) costs,
+    ``budgets`` (K,), plus laminar local constraints."""
+
+    p: jnp.ndarray        # (n, M) f32
+    b: jnp.ndarray        # (n, M, K) f32, non-negative
+    budgets: jnp.ndarray  # (K,) f32, strictly positive
+    sets: jnp.ndarray     # (L, M) bool
+    caps: jnp.ndarray     # (L,) int32
+
+
+class SparseKP(NamedTuple):
+    """Section 5.1 sparse GKP shard: item j consumes only knapsack j.
+
+    ``p`` (n, K) profits, ``b`` (n, K) diagonal costs b[i, k, k],
+    ``budgets`` (K,). The single local constraint (at most Q items per
+    user) is static and passed alongside.
+    """
+
+    p: jnp.ndarray        # (n, K) f32
+    b: jnp.ndarray        # (n, K) f32, non-negative
+    budgets: jnp.ndarray  # (K,) f32, strictly positive
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Static solver configuration (hashable; safe as a jit static arg).
+
+    algo: "scd" (Alg 4) or "dd" (Alg 2).
+    reduce: "bucketed" (Section 5.2 production path) or "exact"
+        (bit-faithful Alg 4 reduce; gathers candidates, test scale only).
+    """
+
+    algo: str = "scd"
+    # §4.3.2: synchronous CD updates every lam_k at once (production mode);
+    # cyclic CD sweeps coordinates one at a time (K reduces per iteration,
+    # converges monotonically on small/strongly-coupled instances).
+    cd_mode: str = "sync"
+    reduce: str = "bucketed"
+    max_iters: int = 32
+    tol: float = 1e-3
+    # DD (Alg 2) learning rate.
+    dd_lr: float = 1e-3
+    # Section 5.2 bucketing: edges at lam_t +/- delta * growth**i,
+    # i in [0, half). n_buckets = 2 * half + 2.
+    bucket_half: int = 24
+    bucket_delta: float = 1e-4
+    bucket_growth: float = 1.6
+    # Section 5.3 pre-solving.
+    presolve_samples: int = 0  # 0 disables
+    # Fraction of map shards the reduce is allowed to proceed with
+    # (straggler mitigation; 1.0 = wait for all).
+    partial_fraction: float = 1.0
+    # Record per-iteration (lam, primal, dual, gap, violation) traces.
+    record_history: bool = False
+    # Use the Pallas kernels for the sparse map + histogram (TPU target;
+    # interpret-mode on CPU — slow, used for integration testing).
+    use_kernels: bool = False
+    # Apply the §5.4 feasibility projection to the returned primal.
+    postprocess: bool = True
+    dtype: jnp.dtype = jnp.float32
+
+    def replace(self, **kw) -> "SolverConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def disjoint_partition_sets(group_sizes, caps, m=None):
+    """Build a LaminarSets for disjoint groups of consecutive items."""
+    total = int(sum(group_sizes))
+    m = total if m is None else m
+    rows, start = [], 0
+    for g in group_sizes:
+        row = jnp.zeros((m,), bool).at[start:start + g].set(True)
+        rows.append(row)
+        start += g
+    return LaminarSets(jnp.stack(rows), jnp.asarray(caps, jnp.int32))
+
+
+def cardinality_set(m, cap):
+    """Single local constraint: choose at most ``cap`` of the m items."""
+    return LaminarSets(jnp.ones((1, m), bool), jnp.asarray([cap], jnp.int32))
+
+
+def hierarchy_from_lists(index_lists, caps, m):
+    """LaminarSets from explicit index lists (validated laminar, topo-sorted).
+
+    Raises ValueError if the family is not laminar (Definition 2.1).
+    """
+    sets = [frozenset(s) for s in index_lists]
+    for a in sets:
+        for b in sets:
+            inter = a & b
+            if inter and not (a <= b or b <= a):
+                raise ValueError("local constraint family is not laminar")
+    order = sorted(range(len(sets)), key=lambda i: len(sets[i]))
+    rows = []
+    out_caps = []
+    for i in order:
+        row = jnp.zeros((m,), bool).at[jnp.asarray(sorted(sets[i]), jnp.int32)].set(True)
+        rows.append(row)
+        out_caps.append(caps[i])
+    return LaminarSets(jnp.stack(rows), jnp.asarray(out_caps, jnp.int32))

@@ -1,0 +1,1 @@
+from .synth import kp_shard, lm_batch  # noqa: F401

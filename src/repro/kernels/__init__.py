@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the solver's compute hot-spots (+ jnp oracles).
+
+adjusted_topc   — fused adjusted-profit + top-Q select + consumption (DD map)
+scd_candidates  — Algorithm 5 linear-time candidate generation (SCD map)
+bucket_hist     — Section 5.2 bucketed-reduce histogram (SCD reduce, map side)
+"""
+from . import ops, ref  # noqa: F401
+from .ops import adjusted_topc, bucket_hist, scd_candidates  # noqa: F401

@@ -1,0 +1,37 @@
+"""Jitted public wrappers for the kernel layer.
+
+On TPU these call the Pallas kernels compiled natively; on CPU (this
+container) they run the same kernel bodies under ``interpret=True``, which
+traces the kernel through XLA so correctness (incl. the grid accumulation
+pattern) is exercised end to end. ``use_pallas=False`` falls back to the
+pure-jnp oracle — the solver uses that switch to A/B the kernel path.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .adjusted_topc import adjusted_topc as _adjusted_topc
+from .bucket_hist import bucket_hist as _bucket_hist
+from .scd_candidates import scd_candidates as _scd_candidates
+
+
+def adjusted_topc(p, b, lam, q, use_pallas=True, **kw):
+    """Fused DD map: (x mask, consumption v) for the sparse GKP."""
+    if not use_pallas:
+        return ref.adjusted_topc_ref(p, b, lam, q)
+    return _adjusted_topc(p, b, lam, q, **kw)
+
+
+def scd_candidates(p, b, lam, q, use_pallas=True, **kw):
+    """Alg 5 map: candidate (v1, v2) pairs."""
+    if not use_pallas:
+        return ref.scd_candidates_ref(p, b, lam, q)
+    return _scd_candidates(p, b, lam, q, **kw)
+
+
+def bucket_hist(v1, v2, edges, use_pallas=True, **kw):
+    """§5.2 reduce-side histogram (K, E+1)."""
+    if not use_pallas:
+        return ref.bucket_hist_ref(v1, v2, edges)
+    return _bucket_hist(v1, v2, edges, **kw)

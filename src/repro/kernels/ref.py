@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantics contracts: every kernel result is
+assert_allclose'd against these across shape/dtype sweeps. They share the
+tie-break convention (stable by item index) with core/greedy and
+core/sparse_scd, and are themselves cross-checked against those modules in
+the kernel tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adjusted_topc_ref(p, b, lam, q):
+    """Fused DD/SCD map body, sparse GKP (one item per knapsack).
+
+    p, b: (n, K); lam: (K,). Returns (x (n,K) bool, v (n,K) f32) where x is
+    the top-q positive adjusted profits (ties -> smaller index) and
+    v = b * x is the per-user consumption.
+    """
+    ap = p - lam[None, :] * b
+    order = jnp.argsort(-ap, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    x = (ap > 0) & (ranks < q)
+    return x, jnp.where(x, b, 0.0).astype(p.dtype)
+
+
+def scd_candidates_ref(p, b, lam, q):
+    """Algorithm 5 map: candidate (v1, v2) per (user, knapsack).
+
+    Matches core.sparse_scd.candidates_sparse (invalid -> v1=-1, v2=0).
+    """
+    n, k = p.shape
+    ap = jnp.maximum(p - lam[None, :] * b, 0.0)
+    if q >= k:
+        pbar = jnp.zeros_like(ap)
+    else:
+        top, _ = jax.lax.top_k(ap, q + 1)
+        q_th = top[:, q - 1] if q >= 1 else jnp.full((n,), jnp.inf, ap.dtype)
+        q1_th = top[:, q]
+        in_top = ap >= q_th[:, None]
+        pbar = jnp.where(in_top, q1_th[:, None], q_th[:, None])
+    valid = (p > pbar) & (b > 0)
+    v1 = jnp.where(valid, (p - pbar) / jnp.where(b > 0, b, 1.0), -1.0)
+    v2 = jnp.where(valid, b, 0.0)
+    return v1.astype(p.dtype), v2.astype(p.dtype)
+
+
+def bucket_hist_ref(v1, v2, edges):
+    """Section 5.2 histogram: mass of v2 per (knapsack, bucket).
+
+    v1, v2: (n, K); edges: (K, E) ascending. Bucket j of row k holds
+    candidates with edges[k, j-1] <= v1 < edges[k, j]; returns (K, E+1).
+    """
+    n, k = v1.shape
+    e = edges.shape[-1]
+    idx = jax.vmap(jnp.searchsorted, in_axes=(0, 1))(edges, v1)   # (K, n)
+    onehot = jax.nn.one_hot(idx, e + 1, dtype=v2.dtype)           # (K, n, E+1)
+    return jnp.einsum("kne,nk->ke", onehot, v2)

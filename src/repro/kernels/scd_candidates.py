@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Algorithm 5 linear-time candidate generation.
+
+Per user tile in VMEM: adjusted profits ``ap = max(p - lam*b, 0)``, the
+Q-th / (Q+1)-th largest entries per row (the two order statistics Alg 5
+needs), the per-item beat-threshold ``pbar``, and the emitted candidate
+pairs ``v1 = (p - pbar)/b``, ``v2 = b`` — fused so neither ``ap`` nor the
+thresholds ever leave VMEM.
+
+Order statistics are computed with Q+1 sequential masked-max passes (see
+adjusted_topc.py for why quick-select doesn't map to the VPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _order_stats(ap, q):
+    """(n,K) -> (q_th (n,1), q1_th (n,1)) largest values (with multiplicity)."""
+    n, k = ap.shape
+    neg_inf = jnp.asarray(-jnp.inf, ap.dtype)
+    work = ap
+    q_th = jnp.full((n, 1), jnp.inf, ap.dtype)
+    q1_th = jnp.full((n, 1), jnp.inf, ap.dtype)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n, k), 1)
+    for i in range(q + 1):
+        m = jnp.max(work, axis=1, keepdims=True)
+        if i == q - 1:
+            q_th = m
+        if i == q:
+            q1_th = m
+        is_max = work == m
+        pick_idx = jnp.min(jnp.where(is_max, idx, k), axis=1, keepdims=True)
+        work = jnp.where(idx == pick_idx, neg_inf, work)
+    return q_th, q1_th
+
+
+def _kernel(p_ref, b_ref, lam_ref, v1_ref, v2_ref, *, q):
+    p = p_ref[...]
+    b = b_ref[...]
+    lam = lam_ref[...]                                        # (1, K)
+    ap = jnp.maximum(p - lam * b, 0.0)
+    n, k = p.shape
+    if q >= k:
+        pbar = jnp.zeros_like(ap)
+    else:
+        q_th, q1_th = _order_stats(ap, q)
+        in_top = ap >= q_th
+        pbar = jnp.where(in_top, q1_th, q_th)
+    valid = (p > pbar) & (b > 0)
+    safe_b = jnp.where(b > 0, b, jnp.ones_like(b))
+    v1_ref[...] = jnp.where(valid, (p - pbar) / safe_b, -jnp.ones_like(p))
+    v2_ref[...] = jnp.where(valid, b, jnp.zeros_like(b))
+
+
+@functools.partial(jax.jit, static_argnames=("q", "tile_n", "interpret"))
+def scd_candidates(p, b, lam, q, tile_n=512, interpret=None):
+    """p, b: (n, K); lam: (K,). Returns (v1, v2): (n, K) Alg 5 candidates."""
+    n, k = p.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tile_n = min(tile_n, n)
+    assert n % tile_n == 0, (n, tile_n)
+    grid = (n // tile_n,)
+    lam2 = lam.reshape(1, k).astype(p.dtype)
+    return pl.pallas_call(
+        functools.partial(_kernel, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), p.dtype),
+            jax.ShapeDtypeStruct((n, k), p.dtype),
+        ],
+        interpret=interpret,
+    )(p, b, lam2)

@@ -1,0 +1,1 @@
+from .config import MLACfg, MambaCfg, MoECfg, ModelConfig  # noqa: F401

@@ -1,0 +1,265 @@
+"""Attention mixers: GQA/MQA with RoPE + qk-norm, chunked-causal softmax,
+sliding windows, cross attention, KV-cache decode, and DeepSeek-style MLA.
+
+Prefill/train uses an online-softmax double chunk scan (flash-attention
+structure in pure jnp): peak memory is O(chunk^2) per head instead of
+O(S^2); causally dead (q-chunk, kv-chunk) pairs are still computed and
+masked (the TPU answer is the Pallas flash kernel; this is the portable
+oracle the dry-run compiles).
+
+Decode consumes a (B, S_max, KV, hd) cache and computes one step. MLA
+decode uses the absorbed form: scores through the compressed c_kv cache
+directly, so per-token cache is kv_lora + rope_hd floats regardless of the
+number of heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, init_rms, rms_norm, rope, truncnorm
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": truncnorm(ks[0], (d, h, hd), cfg.param_dtype, d ** -0.5),
+        "wk": truncnorm(ks[1], (d, kv, hd), cfg.param_dtype, d ** -0.5),
+        "wv": truncnorm(ks[2], (d, kv, hd), cfg.param_dtype, d ** -0.5),
+        "wo": truncnorm(ks[3], (h, hd, d), cfg.param_dtype, (h * hd) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = init_rms(hd, cfg.param_dtype)
+        p["knorm"] = init_rms(hd, cfg.param_dtype)
+    return p
+
+
+def _qkv(p, cfg, x, positions, rope_on=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(p["qnorm"], q, cfg.norm_eps)
+        k = rms_norm(p["knorm"], k, cfg.norm_eps)
+    if rope_on:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunked_attention(q, k, v, q_pos, kv_pos, chunk, causal, window=0):
+    """Online-softmax over kv chunks, scanned over q chunks.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); positions give the mask.
+    Returns (B, Sq, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+
+    def pick(s, c):
+        """Largest divisor of s that is <= c (falls back to s itself)."""
+        c = min(c, s)
+        while s % c:
+            c -= 1
+        return c
+
+    cq = pick(sq, chunk)
+    ck = pick(skv, chunk)
+    nq, nk = sq // cq, skv // ck
+    scale = hd ** -0.5
+
+    qc = q.reshape(b, nq, cq, kvh, rep, hd)
+    qp = q_pos.reshape(nq, cq)
+    kc = k.reshape(b, nk, ck, kvh, hd)
+    vc = v.reshape(b, nk, ck, kvh, hd)
+    kp = kv_pos.reshape(nk, ck)
+
+    def q_step(_, qi):
+        qblk, qpos = qi                                    # (b,cq,kvh,rep,hd), (cq,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kpos = ki
+            s = jnp.einsum("bqgrh,bkgh->bgrqk", qblk, kblk) * scale
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None, None], s.astype(jnp.float32), NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))              # (b,g,r,q)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgh->bgrqh", p.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, kvh, rep, cq), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, rep, cq), jnp.float32),
+            jnp.zeros((b, kvh, rep, cq, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kp),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (b,g,r,cq,hd)
+        return None, out.transpose(0, 3, 1, 2, 4)          # (b,cq,g,r,hd)
+
+    _, out = jax.lax.scan(q_step, None, (qc.transpose(1, 0, 2, 3, 4, 5), qp))
+    # out: (nq, b, cq, kvh, rep, hd) -> (b, sq, h, hd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def attention(p, cfg, x, positions, causal=True, kv=None, kv_pos=None):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    kv: optional (B, S_enc, D) encoder memory for cross attention.
+    """
+    if kv is None:
+        q, k, v = _qkv(p, cfg, x, positions)
+        kv_pos = positions
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", kv, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", kv, p["wv"].astype(x.dtype))
+        if cfg.qk_norm:
+            q = rms_norm(p["qnorm"], q, cfg.norm_eps)
+            k = rms_norm(p["knorm"], k, cfg.norm_eps)
+    out = _chunked_attention(
+        q, k, v, positions, kv_pos, cfg.attn_chunk, causal, cfg.window
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# --- decode ------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch, seq_len, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    z = jnp.zeros
+    return {
+        "k": z((batch, seq_len, kv, hd), dtype),
+        "v": z((batch, seq_len, kv, hd), dtype),
+    }
+
+
+def decode_attention(p, cfg, x, cache, pos):
+    """One-token decode. x: (B, 1, D); pos: () current index. Updates cache."""
+    q, k, v = _qkv(p, cfg, x, pos[None][None, :])          # (B,1,H,hd)
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1),
+    }
+    b, s, kvh, hd = cache["k"].shape
+    rep = cfg.n_heads // kvh
+    qg = q.reshape(b, kvh, rep, hd)
+    s_ = jnp.einsum("bgrh,bkgh->bgrk", qg, cache["k"]) * hd ** -0.5
+    kv_pos = jnp.arange(s)
+    mask = kv_pos <= pos
+    if cfg.window:
+        mask &= kv_pos > pos - cfg.window
+    s_ = jnp.where(mask[None, None, None], s_.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bgrk,bkgh->bgrh", w.astype(cache["v"].dtype), cache["v"])
+    o = o.reshape(b, 1, cfg.n_heads, hd)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype)), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV + decoupled RoPE head.
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    ks = jax.random.split(key, 8)
+    qd = m.nope_head_dim + m.rope_head_dim
+    p = {
+        # q path (low rank)
+        "wq_a": truncnorm(ks[0], (d, m.q_lora), cfg.param_dtype, d ** -0.5),
+        "q_norm": init_rms(m.q_lora, cfg.param_dtype),
+        "wq_b": truncnorm(ks[1], (m.q_lora, h, qd), cfg.param_dtype, m.q_lora ** -0.5),
+        # kv path: compressed c_kv plus shared rope key
+        "wkv_a": truncnorm(ks[2], (d, m.kv_lora + m.rope_head_dim), cfg.param_dtype, d ** -0.5),
+        "kv_norm": init_rms(m.kv_lora, cfg.param_dtype),
+        "wk_b": truncnorm(ks[3], (m.kv_lora, h, m.nope_head_dim), cfg.param_dtype, m.kv_lora ** -0.5),
+        "wv_b": truncnorm(ks[4], (m.kv_lora, h, m.v_head_dim), cfg.param_dtype, m.kv_lora ** -0.5),
+        "wo": truncnorm(ks[5], (h, m.v_head_dim, d), cfg.param_dtype, (h * m.v_head_dim) ** -0.5),
+    }
+    return p
+
+
+def _mla_qc(p, cfg, x, positions):
+    m = cfg.mla
+    ql = rms_norm(p["q_norm"], x @ p["wq_a"].astype(x.dtype), cfg.norm_eps)
+    q = jnp.einsum("bsl,lhk->bshk", ql, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = x @ p["wkv_a"].astype(x.dtype)
+    c_kv, k_rope = jnp.split(ckv_full, [m.kv_lora], axis=-1)
+    c_kv = rms_norm(p["kv_norm"], c_kv, cfg.norm_eps)
+    # headless shared rope key: add/strip a singleton head axis for rope()
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(p, cfg, x, positions):
+    """Prefill/train MLA: decompress per head, chunked softmax."""
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qc(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsl,lhk->bshk", c_kv, p["wk_b"].astype(x.dtype))
+    v = jnp.einsum("bsl,lhk->bshk", c_kv, p["wv_b"].astype(x.dtype))
+    h = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(
+        k_rope[:, :, None, :], (*k_rope.shape[:2], h, m.rope_head_dim)
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    # pad v to match hd for the shared chunked kernel, slice after
+    out = _chunked_attention(q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                               (0, q.shape[-1] - v.shape[-1]))),
+                             positions, positions, cfg.attn_chunk, True, cfg.window)
+    out = out[..., : m.v_head_dim]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def init_mla_cache(cfg, batch, seq_len, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, seq_len, m.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, seq_len, m.rope_head_dim), dtype),
+    }
+
+
+def decode_mla(p, cfg, x, cache, pos):
+    """Absorbed-form MLA decode: scores/values through c_kv directly."""
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_qc(p, cfg, x, pos[None][None, :])
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, pos, 1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, pos, 1),
+    }
+    # absorb W_uk into q: (B,1,H,nope) x (kv_lora,H,nope) -> (B,H,kv_lora)
+    q_abs = jnp.einsum("bshk,lhk->bhl", q_nope, p["wk_b"].astype(x.dtype))
+    s_c = jnp.einsum("bhl,bsl->bhs", q_abs, cache["c_kv"])
+    s_r = jnp.einsum("bshk,btk->bht", q_rope, cache["k_rope"])
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    s = (s_c + s_r) * scale
+    kv_pos = jnp.arange(cache["c_kv"].shape[1])
+    s = jnp.where(kv_pos[None, None] <= pos, s.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", w.astype(x.dtype), cache["c_kv"])
+    o = jnp.einsum("bhl,lhk->bhk", ctx, p["wv_b"].astype(x.dtype))
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"].astype(x.dtype))
+    return out[:, None, :], cache

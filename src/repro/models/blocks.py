@@ -1,0 +1,111 @@
+"""Transformer blocks assembled from a (mixer, ffn) pattern slot.
+
+A block is pre-norm residual: x += mixer(norm(x)); x += ffn(norm(x)).
+Slot kinds:  mixer in {"attn", "mla", "mamba"};  ffn in {"dense", "moe",
+"moe+shared", "none"}.  The same block code serves train/prefill (full
+sequence) and decode (one token + per-block cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding
+from .attention import (
+    attention,
+    decode_attention,
+    decode_mla,
+    init_attn,
+    init_kv_cache,
+    init_mla,
+    init_mla_cache,
+    mla_attention,
+)
+from .layers import init_mlp, init_rms, mlp, rms_norm
+from .mamba2 import decode_mamba, init_mamba, init_mamba_cache, mamba_mixer
+from .moe import init_moe, moe_decode, moe_train
+
+
+def mixer_kind(cfg, slot: str) -> str:
+    if slot == "attn" and cfg.use_mla:
+        return "mla"
+    return slot
+
+
+def init_block(key, cfg, slot: str, ffn: str):
+    ks = jax.random.split(key, 4)
+    kind = mixer_kind(cfg, slot)
+    p = {"norm1": init_rms(cfg.d_model, cfg.param_dtype)}
+    if kind == "attn":
+        p["mixer"] = init_attn(ks[0], cfg)
+    elif kind == "mla":
+        p["mixer"] = init_mla(ks[0], cfg)
+    elif kind == "mamba":
+        p["mixer"] = init_mamba(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if ffn != "none":
+        p["norm2"] = init_rms(cfg.d_model, cfg.param_dtype)
+    if ffn == "dense":
+        p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    elif ffn == "moe":
+        p["ffn"] = init_moe(ks[1], cfg)
+        if cfg.moe.n_shared:
+            p["shared"] = init_mlp(
+                ks[2], cfg.d_model, cfg.moe.n_shared * cfg.moe.d_ff,
+                cfg.param_dtype,
+            )
+    return p
+
+
+def _apply_ffn(p, cfg, x, ffn, decode=False):
+    if ffn == "none":
+        return x
+    h = rms_norm(p["norm2"], x, cfg.norm_eps)
+    if ffn == "dense":
+        out = mlp(p["ffn"], h, cfg.act)
+    else:
+        out = moe_decode(p["ffn"], cfg, h, cfg.act) if decode else \
+              moe_train(p["ffn"], cfg, h, cfg.act)
+        if "shared" in p:
+            out = out + mlp(p["shared"], h, cfg.act)
+    return x + out
+
+
+def block_apply(p, cfg, x, positions, slot: str, ffn: str):
+    """Full-sequence block (train/prefill/encoder-with-causal=False later)."""
+    kind = mixer_kind(cfg, slot)
+    h = rms_norm(p["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        mx = attention(p["mixer"], cfg, h, positions, causal=True)
+    elif kind == "mla":
+        mx = mla_attention(p["mixer"], cfg, h, positions)
+    else:
+        mx = mamba_mixer(p["mixer"], cfg, h)
+    x = x + mx
+    x = _apply_ffn(p, cfg, x, ffn)
+    return sharding.constrain(x, "batch", "seq", None)
+
+
+def init_block_cache(cfg, slot: str, batch, seq_len, dtype):
+    kind = mixer_kind(cfg, slot)
+    if kind == "attn":
+        return init_kv_cache(cfg, batch, seq_len, dtype)
+    if kind == "mla":
+        return init_mla_cache(cfg, batch, seq_len, dtype)
+    return init_mamba_cache(cfg, batch, dtype)
+
+
+def block_decode(p, cfg, x, cache, pos, slot: str, ffn: str):
+    """One-token block step; returns (x, new_cache)."""
+    kind = mixer_kind(cfg, slot)
+    h = rms_norm(p["norm1"], x, cfg.norm_eps)
+    if kind == "attn":
+        mx, cache = decode_attention(p["mixer"], cfg, h, cache, pos)
+    elif kind == "mla":
+        mx, cache = decode_mla(p["mixer"], cfg, h, cache, pos)
+    else:
+        mx, cache = decode_mamba(p["mixer"], cfg, h, cache, pos)
+    x = x + mx
+    x = _apply_ffn(p, cfg, x, ffn, decode=True)
+    return x, cache

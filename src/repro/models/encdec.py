@@ -1,0 +1,205 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+Encoder: bidirectional attention over stubbed modality frame embeddings.
+Decoder: causal self-attention + cross-attention to the encoder memory.
+Both stacks scan over layers like lm.py. Decode caches the self-attention
+KV per layer; the cross KV is computed once from the encoder memory and is
+static across steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding
+from .attention import (
+    attention,
+    decode_attention,
+    init_attn,
+    init_kv_cache,
+)
+from .layers import embed, init_embed, init_mlp, init_rms, mlp, rms_norm, unembed
+
+NEG_INF = -2.0 ** 30
+
+
+def _init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": init_rms(cfg.d_model, cfg.param_dtype),
+        "attn": init_attn(k1, cfg),
+        "norm2": init_rms(cfg.d_model, cfg.param_dtype),
+        "ffn": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": init_rms(cfg.d_model, cfg.param_dtype),
+        "self": init_attn(k1, cfg),
+        "norm_x": init_rms(cfg.d_model, cfg.param_dtype),
+        "cross": init_attn(k2, cfg),
+        "norm2": init_rms(cfg.d_model, cfg.param_dtype),
+        "ffn": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.param_dtype),
+    }
+
+
+def init_encdec(key, cfg):
+    ks = jax.random.split(key, 6)
+    ne, nd = cfg.n_enc_layers, cfg.n_layers
+    return {
+        "embed": init_embed(ks[0], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "enc": jax.vmap(lambda k: _init_enc_layer(k, cfg))(jax.random.split(ks[1], ne)),
+        "enc_norm": init_rms(cfg.d_model, cfg.param_dtype),
+        "dec": jax.vmap(lambda k: _init_dec_layer(k, cfg))(jax.random.split(ks[2], nd)),
+        "final_norm": init_rms(cfg.d_model, cfg.param_dtype),
+        "head": init_embed(ks[3], cfg.vocab, cfg.d_model, cfg.param_dtype),
+    }
+
+
+def _enc_layer(p, cfg, x, positions):
+    h = rms_norm(p["norm1"], x, cfg.norm_eps)
+    x = x + attention(p["attn"], cfg, h, positions, causal=False)
+    h = rms_norm(p["norm2"], x, cfg.norm_eps)
+    x = x + mlp(p["ffn"], h, cfg.act)
+    return sharding.constrain(x, "batch", "seq", None)
+
+
+def _dec_layer(p, cfg, x, positions, memory, mem_pos):
+    h = rms_norm(p["norm1"], x, cfg.norm_eps)
+    x = x + attention(p["self"], cfg, h, positions, causal=True)
+    h = rms_norm(p["norm_x"], x, cfg.norm_eps)
+    x = x + attention(p["cross"], cfg, h, positions, causal=False,
+                      kv=memory, kv_pos=mem_pos)
+    h = rms_norm(p["norm2"], x, cfg.norm_eps)
+    x = x + mlp(p["ffn"], h, cfg.act)
+    return sharding.constrain(x, "batch", "seq", None)
+
+
+def encode(params, cfg, frames):
+    """frames: (B, F, D) stubbed modality embeddings -> encoder memory."""
+    x = sharding.constrain(frames.astype(cfg.dtype), "batch", "seq", None)
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, p):
+        fn = jax.checkpoint(_enc_layer, static_argnums=(1,)) if cfg.remat else _enc_layer
+        return fn(p, cfg, x, pos), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc"])
+    else:
+        for t in range(jax.tree.leaves(params["enc"])[0].shape[0]):
+            x, _ = body(x, jax.tree.map(lambda a: a[t], params["enc"]))
+    return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(params, cfg, tokens, memory):
+    """Teacher-forced decoder hidden states."""
+    x = embed(params["embed"], tokens, cfg.dtype)
+    x = sharding.constrain(x, "batch", "seq", None)
+    pos = jnp.arange(x.shape[1])
+    mem_pos = jnp.arange(memory.shape[1])
+
+    def body(x, p):
+        fn = jax.checkpoint(_dec_layer, static_argnums=(1,)) if cfg.remat else _dec_layer
+        return fn(p, cfg, x, pos, memory, mem_pos), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["dec"])
+    else:
+        for t in range(jax.tree.leaves(params["dec"])[0].shape[0]):
+            x, _ = body(x, jax.tree.map(lambda a: a[t], params["dec"]))
+    return rms_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def encdec_loss(params, cfg, frames, tokens, targets, mask=None):
+    memory = encode(params, cfg, frames)
+    h = decode_train(params, cfg, tokens, memory)
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    nc = s // c
+    hc = h.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nc, c).transpose(1, 0, 2)
+    mm = (mask if mask is not None else jnp.ones_like(targets, jnp.float32))
+    mm = mm.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        hh, tt, m_ = inp
+        logits = unembed(params["head"], hh)
+        logits = sharding.constrain(logits, "batch", None, "vocab")
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tt[..., None], axis=-1)[..., 0]
+        return carry + ((lse - gold) * m_).sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (hc, tc, mm))
+    return total / jnp.maximum(mm.sum(), 1.0)
+
+
+# --- decode ------------------------------------------------------------------
+
+def init_encdec_cache(params, cfg, frames, batch, seq_len):
+    """Returns (memory, cross-KV per layer, self caches per layer)."""
+    memory = encode(params, cfg, frames)
+
+    def cross_kv(p):
+        k = jnp.einsum("bsd,dhk->bshk", memory, p["cross"]["wk"].astype(memory.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", memory, p["cross"]["wv"].astype(memory.dtype))
+        return {"k": k, "v": v}
+
+    if cfg.scan_layers:
+        cross = jax.vmap(cross_kv)(params["dec"]) if False else jax.lax.map(
+            cross_kv, params["dec"])
+    else:
+        nl = jax.tree.leaves(params["dec"])[0].shape[0]
+        cross = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[cross_kv(jax.tree.map(lambda a: a[t], params["dec"])) for t in range(nl)],
+        )
+    nl = jax.tree.leaves(params["dec"])[0].shape[0]
+    self_cache = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (nl, *a.shape)),
+        init_kv_cache(cfg, batch, seq_len, cfg.dtype),
+    )
+    return {"cross": cross, "self": self_cache}
+
+
+def encdec_decode_step(params, cfg, caches, token, pos):
+    x = embed(params["embed"], token, cfg.dtype)
+
+    def body(x, inp):
+        p, sc, xc = inp
+        h = rms_norm(p["norm1"], x, cfg.norm_eps)
+        sa, sc = decode_attention(p["self"], cfg, h, sc, pos)
+        x = x + sa
+        h = rms_norm(p["norm_x"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"].astype(h.dtype))
+        b, _, kvh, hd = xc["k"].shape
+        rep = cfg.n_heads // kvh
+        qg = q.reshape(b, kvh, rep, hd)
+        s_ = jnp.einsum("bgrh,bkgh->bgrk", qg, xc["k"]) * hd ** -0.5
+        w = jax.nn.softmax(s_.astype(jnp.float32), axis=-1)
+        o = jnp.einsum("bgrk,bkgh->bgrh", w.astype(xc["v"].dtype), xc["v"])
+        o = o.reshape(b, 1, cfg.n_heads, hd)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["cross"]["wo"].astype(h.dtype))
+        h = rms_norm(p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(p["ffn"], h, cfg.act)
+        return x, sc
+
+    if cfg.scan_layers:
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec"], caches["self"], caches["cross"])
+        )
+    else:
+        nl = jax.tree.leaves(params["dec"])[0].shape[0]
+        outs = []
+        for t in range(nl):
+            x, sc = body(x, (jax.tree.map(lambda a: a[t], params["dec"]),
+                             jax.tree.map(lambda a: a[t], caches["self"]),
+                             jax.tree.map(lambda a: a[t], caches["cross"])))
+            outs.append(sc)
+        new_self = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["head"], x)
+    return logits, {**caches, "self": new_self}

@@ -1,0 +1,94 @@
+"""Shared primitive layers: norms, RoPE, embeddings, gated MLPs.
+
+Pure functions over explicit parameter dicts (no framework dependency).
+``init_*`` functions only build arrays through jax.random / jnp, so the
+whole parameter tree can be abstracted with ``jax.eval_shape`` for
+allocation-free AOT lowering (the multi-pod dry-run path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncnorm(key, shape, dtype, scale):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# --- norms -----------------------------------------------------------------
+
+def init_rms(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --- rotary embeddings -------------------------------------------------------
+
+def rope(x, positions, theta):
+    """x: (..., S, H, hd) or (..., S, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    if x.ndim > ang.ndim:
+        ang = ang[..., None, :]                            # broadcast heads
+    while x.ndim > ang.ndim:
+        ang = ang[None]                                    # broadcast batch
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- dense / mlp -------------------------------------------------------------
+
+def init_linear(key, d_in, d_out, dtype, out_shape=None):
+    shape = (d_in, d_out) if out_shape is None else (d_in, *out_shape)
+    return {"w": truncnorm(key, shape, dtype, d_in ** -0.5)}
+
+
+def linear(p, x, spec=None):
+    w = p["w"]
+    if w.ndim == 2:
+        return x @ w.astype(x.dtype)
+    # (d_in, a, b, ...) fan-out projections
+    return jnp.einsum("...d,dab->...ab", x, w.astype(x.dtype))
+
+
+def init_mlp(key, d, f, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": truncnorm(k1, (d, 2, f), dtype, d ** -0.5),   # [gate, up] fused
+        "wo": truncnorm(k2, (f, d), dtype, f ** -0.5),
+    }
+
+
+def mlp(p, x, act="silu"):
+    h = jnp.einsum("...d,dgf->...gf", x, p["wi"].astype(x.dtype))
+    gate, up = h[..., 0, :], h[..., 1, :]
+    g = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate, approximate=True)
+    return jnp.einsum("...f,fd->...d", g * up, p["wo"].astype(x.dtype))
+
+
+# --- embeddings --------------------------------------------------------------
+
+def init_embed(key, vocab, d, dtype):
+    return {"e": truncnorm(key, (vocab, d), dtype, 1.0)}
+
+
+def embed(p, tokens, dtype):
+    return p["e"].astype(dtype)[tokens]
+
+
+def unembed(p, x):
+    # d^-0.5 keeps logits O(1) at init for both tied and untied heads
+    d = x.shape[-1]
+    return jnp.einsum("...d,vd->...v", x, p["e"].astype(x.dtype)) * d ** -0.5

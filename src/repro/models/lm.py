@@ -1,0 +1,202 @@
+"""Decoder-only LM: embed -> pattern-scanned blocks -> norm -> chunked loss.
+
+Layer stacking: parameters for each pattern slot are stacked along a
+leading period axis and the stack is traversed with ``jax.lax.scan`` (HLO
+and compile time O(pattern), not O(n_layers)); ``cfg.scan_layers=False``
+unrolls instead (used by the roofline probe to get exact HLO FLOP counts).
+
+The LM head never materialises (B, S, V) logits: the loss scans over
+sequence chunks, projecting to the (model-sharded) vocab one chunk at a
+time — the standard memory fix at 150k+ vocabs.
+
+Multimodal stubs per the assignment: "vision"/"audio" models take
+precomputed patch/frame embeddings concatenated in front of the token
+embeddings; loss is masked to text positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding
+from .blocks import block_apply, block_decode, init_block, init_block_cache
+from .layers import embed, init_embed, init_rms, rms_norm, unembed
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _slot_ffns(cfg):
+    return tuple(cfg.ffn_pattern)
+
+
+def init_lm(key, cfg):
+    """Parameter tree. Block slot s params are stacked over periods."""
+    ks = jax.random.split(key, 4 + len(cfg.pattern))
+    params = {
+        "embed": init_embed(ks[0], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "final_norm": init_rms(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = init_embed(ks[1], cfg.vocab, cfg.d_model, cfg.param_dtype)
+    if cfg.first_dense_ff:
+        cfg0 = cfg.replace(d_ff=cfg.first_dense_ff)
+        params["block0"] = init_block(ks[2], cfg0, cfg.pattern[0], "dense")
+    n_periods = cfg.n_periods - (0 if not cfg.first_dense_ff else 0)
+
+    def init_slot(slot_key, slot, ffn):
+        def one(k):
+            return init_block(k, cfg, slot, ffn)
+        return jax.vmap(one)(jax.random.split(slot_key, n_periods))
+
+    params["slots"] = [
+        init_slot(ks[4 + i], slot, ffn)
+        for i, (slot, ffn) in enumerate(zip(cfg.pattern, _slot_ffns(cfg)))
+    ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _stack_apply(params, cfg, x, positions, skip_first_of_slot0=False):
+    """Scan the stacked periods; unrolled when cfg.scan_layers is False."""
+    ffns = _slot_ffns(cfg)
+
+    def period(x, slot_params):
+        for i, (slot, ffn) in enumerate(zip(cfg.pattern, ffns)):
+            p_i = slot_params[i]
+            fn = block_apply
+            if cfg.remat:
+                fn = jax.checkpoint(block_apply, static_argnums=(1, 4, 5))
+            x = fn(p_i, cfg, x, positions, slot, ffn)
+        return x
+
+    if cfg.scan_layers:
+        def body(x, slot_params):
+            return period(x, slot_params), None
+        x, _ = jax.lax.scan(body, x, params["slots"])
+    else:
+        n_periods = jax.tree.leaves(params["slots"][0])[0].shape[0]
+        for t in range(n_periods):
+            slot_params = jax.tree.map(lambda a: a[t], params["slots"])
+            x = period(x, slot_params)
+    return x
+
+
+def forward(params, cfg, tokens, extra_embeds=None):
+    """Hidden states (B, S_total, D). extra_embeds: (B, P, D) modality stub
+    prepended before the token embeddings."""
+    x = embed(params["embed"], tokens, cfg.dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cfg.dtype), x], axis=1)
+    x = sharding.constrain(x, "batch", "seq", None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))[0]
+    if params.get("block0") is not None:
+        cfg0 = cfg.replace(d_ff=cfg.first_dense_ff or cfg.d_ff)
+        fn = jax.checkpoint(block_apply, static_argnums=(1, 4, 5)) if cfg.remat else block_apply
+        x = fn(params["block0"], cfg0, x, positions, cfg.pattern[0], "dense")
+    x = _stack_apply(params, cfg, x, positions)
+    return rms_norm(params["final_norm"], x, cfg.norm_eps)
+
+
+def _head_params(params):
+    return params.get("head", params["embed"])
+
+
+def lm_loss(params, cfg, tokens, targets, mask=None, extra_embeds=None):
+    """Mean CE, chunked over the sequence. targets: (B, S) int; mask (B, S)."""
+    h = forward(params, cfg, tokens, extra_embeds)
+    if extra_embeds is not None:
+        h = h[:, extra_embeds.shape[1]:]                    # text positions only
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    nc = s // c
+    assert s % c == 0
+    hc = h.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nc, c).transpose(1, 0, 2)
+    mc = (mask if mask is not None else jnp.ones_like(targets, jnp.float32))
+    mc = mc.reshape(b, nc, c).transpose(1, 0, 2)
+    head = _head_params(params)
+
+    def chunk_loss(carry, inp):
+        hh, tt, mm = inp
+        logits = unembed(head, hh)                          # (B, c, V)
+        logits = sharding.constrain(logits, "batch", None, "vocab")
+        if cfg.logit_softcap:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tt[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mm
+        return carry + nll.sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (hc, tc, mc))
+    denom = jnp.maximum(mc.sum(), 1.0)
+    return total / denom
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, seq_len, dtype=None):
+    """Per-layer caches, stacked per slot like the params."""
+    dtype = dtype or cfg.dtype
+    n_periods = cfg.n_periods
+
+    def slot_cache(slot):
+        one = init_block_cache(cfg, slot, batch, seq_len, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_periods, *a.shape)), one
+        )
+
+    caches = {"slots": [slot_cache(s) for s in cfg.pattern]}
+    if cfg.first_dense_ff:
+        caches["block0"] = init_block_cache(cfg, cfg.pattern[0], batch, seq_len, dtype)
+    return caches
+
+
+def decode_step(params, cfg, caches, token, pos):
+    """One decode step. token: (B, 1) int32; pos: () int32 cache index.
+    Returns (logits (B, 1, V), new caches)."""
+    x = embed(params["embed"], token, cfg.dtype)
+    x = sharding.constrain(x, "batch", None, None)
+    ffns = _slot_ffns(cfg)
+    if caches.get("block0") is not None:
+        cfg0 = cfg.replace(d_ff=cfg.first_dense_ff or cfg.d_ff)
+        x, c0 = block_decode(params["block0"], cfg0, x, caches["block0"], pos,
+                             cfg.pattern[0], "dense")
+        caches = {**caches, "block0": c0}
+
+    def body(x, per_period):
+        slot_params, slot_caches = per_period
+        new_caches = []
+        for i, (slot, ffn) in enumerate(zip(cfg.pattern, ffns)):
+            x, nc = block_decode(slot_params[i], cfg, x, slot_caches[i], pos,
+                                 slot, ffn)
+            new_caches.append(nc)
+        return x, new_caches
+
+    if cfg.scan_layers:
+        x, new_slot_caches = jax.lax.scan(
+            body, x, (params["slots"], caches["slots"])
+        )
+    else:
+        n_periods = jax.tree.leaves(params["slots"][0])[0].shape[0]
+        new_list = []
+        for t in range(n_periods):
+            sp = jax.tree.map(lambda a: a[t], params["slots"])
+            sc = jax.tree.map(lambda a: a[t], caches["slots"])
+            x, nc = body(x, (sp, sc))
+            new_list.append(nc)
+        new_slot_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(_head_params(params), x)
+    logits = sharding.constrain(logits, "batch", None, "vocab")
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, {**caches, "slots": new_slot_caches}

@@ -1,0 +1,180 @@
+"""Mamba2 SSD (state-space duality) mixer: chunked train scan + O(1) decode.
+
+Train/prefill uses the SSD chunked algorithm (arXiv 2405.21060): within a
+chunk the output is an attention-like quadratic form masked by the decay
+kernel; across chunks a small (H, hd, N) state is carried by a linear scan.
+Decode keeps (conv window, ssm state) per layer and costs O(H * hd * N) per
+token — this is what makes the ``long_500k`` cell tractable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_rms, rms_norm, truncnorm
+
+
+def _dims(cfg):
+    m = cfg.mamba
+    d_in = m.d_inner(cfg.d_model)
+    nh = m.n_heads(cfg.d_model)
+    return m, d_in, nh
+
+
+def init_mamba(key, cfg):
+    m, d_in, nh = _dims(cfg)
+    conv_dim = d_in + 2 * m.n_groups * m.d_state
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    return {
+        # order: [z (d_in), xBC (conv_dim), dt (nh)]
+        "in_proj": truncnorm(ks[0], (d, 2 * d_in + 2 * m.n_groups * m.d_state + nh),
+                             cfg.param_dtype, d ** -0.5),
+        "conv_w": truncnorm(ks[1], (m.d_conv, conv_dim), cfg.param_dtype, 0.2),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(cfg.param_dtype),
+        "d_skip": jnp.ones((nh,), cfg.param_dtype),
+        "dt_bias": jnp.zeros((nh,), cfg.param_dtype),
+        "out_norm": init_rms(d_in, cfg.param_dtype),
+        "out_proj": truncnorm(ks[2], (d_in, d), cfg.param_dtype, d_in ** -0.5),
+    }
+
+
+def _split_proj(p, cfg, x):
+    m, d_in, nh = _dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * m.n_groups * m.d_state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xbc, dt                                       # dt: (B,S,H) f32
+
+
+def _causal_conv(p, xbc):
+    """Depthwise causal conv via shifted adds (kernel K is tiny)."""
+    kw = p["conv_w"].astype(xbc.dtype)                      # (K, C)
+    k = kw.shape[0]
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        shift = k - 1 - i
+        shifted = jnp.pad(xbc, ((0, 0), (shift, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * kw[i]
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _ssd_chunked(xh, dt, a_log, b_, c_, chunk):
+    """SSD scan. xh: (B,S,H,P); dt: (B,S,H); b_, c_: (B,S,G,N).
+
+    Returns y: (B,S,H,P). G divides H (head groups share B/C).
+    """
+    bsz, s, h, p_ = xh.shape
+    g, n = b_.shape[2], b_.shape[3]
+    rep = h // g
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # (H,) negative
+    dta = dt * a[None, None, :]                             # (B,S,H)
+
+    xc = (xh * dt[..., None].astype(xh.dtype)).reshape(bsz, nc, q, h, p_)
+    bc = b_.reshape(bsz, nc, q, g, n)
+    cc = c_.reshape(bsz, nc, q, g, n)
+    dtac = dta.reshape(bsz, nc, q, h)
+    seg = jnp.cumsum(dtac, axis=2)                          # within-chunk cumsum
+
+    # Intra-chunk (quadratic, causal, decay-masked):
+    # L[i,j] = exp(seg_i - seg_j) for i >= j. Mask BEFORE exp: the upper
+    # triangle has positive exponents whose inf would poison the where-grad.
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # (B,nc,q,q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    li = jnp.where(causal[None, None, :, :, None], li, -jnp.inf)
+    l_mask = jnp.exp(li)
+    cb = jnp.einsum("bcqgn,bckgn->bcqkg", cc, bc)           # (B,nc,q,q,G)
+    cb = jnp.repeat(cb, rep, axis=-1)                       # (B,nc,q,q,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp",
+                         (cb * l_mask).astype(xh.dtype), xc)
+
+    # Chunk state: S_c = sum_j exp(seg_end - seg_j) B_j x_j^T
+    decay_b = jnp.exp(seg[:, :, -1:, :] - seg)              # (B,nc,q,H)
+    bh = jnp.repeat(bc, rep, axis=3)                        # (B,nc,q,H,N)
+    bx = jnp.einsum("bcqhn,bcqhp->bchpn",
+                    bh, xc * decay_b[..., None].astype(xh.dtype))
+
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                 # (B,nc,H)
+
+    def scan_state(h_prev, inp):
+        bx_c, dec_c = inp                                   # (B,H,P,N), (B,H)
+        h_new = h_prev * dec_c[:, :, None, None] + bx_c
+        return h_new, h_prev
+
+    init = jnp.zeros((bsz, h, p_, n), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        scan_state, init,
+        (bx.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)),
+    )                                                       # (nc,B,H,P,N) states BEFORE each chunk
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)              # (B,nc,H,P,N)
+
+    # Inter-chunk: y_j += C_j exp(seg_j) h_prev
+    ch = jnp.repeat(cc, rep, axis=3)                        # (B,nc,q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp",
+                         ch * jnp.exp(seg)[..., None].astype(ch.dtype),
+                         h_prevs.astype(ch.dtype))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p_)
+    return y
+
+
+def mamba_mixer(p, cfg, x, positions=None):
+    """Full-sequence SSD mixer. x: (B,S,D) -> (B,S,D)."""
+    m, d_in, nh = _dims(cfg)
+    z, xbc, dt = _split_proj(p, cfg, x)
+    xbc = _causal_conv(p, xbc)
+    xh, b_, c_ = jnp.split(xbc, [d_in, d_in + m.n_groups * m.d_state], -1)
+    bsz, s = x.shape[:2]
+    xh = xh.reshape(bsz, s, nh, m.head_dim)
+    b_ = b_.reshape(bsz, s, m.n_groups, m.d_state)
+    c_ = c_.reshape(bsz, s, m.n_groups, m.d_state)
+    y = _ssd_chunked(xh, dt, p["a_log"], b_, c_, m.chunk)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_in)
+    y = rms_norm(p["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+# --- decode ------------------------------------------------------------------
+
+def init_mamba_cache(cfg, batch, dtype):
+    m, d_in, nh = _dims(cfg)
+    conv_dim = d_in + 2 * m.n_groups * m.d_state
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, m.head_dim, m.d_state), jnp.float32),
+    }
+
+
+def decode_mamba(p, cfg, x, cache, pos):
+    """One-token SSD step. x: (B,1,D)."""
+    m, d_in, nh = _dims(cfg)
+    z, xbc, dt = _split_proj(p, cfg, x)                     # (B,1,*)
+    xbc = xbc[:, 0]
+    window = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,C)
+    kw = p["conv_w"].astype(xbc.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, kw) + p["conv_b"].astype(xbc.dtype)
+    conv_out = jax.nn.silu(conv_out)
+    xh, b_, c_ = jnp.split(conv_out, [d_in, d_in + m.n_groups * m.d_state], -1)
+    xh = xh.reshape(-1, nh, m.head_dim)
+    b_ = b_.reshape(-1, m.n_groups, m.d_state)
+    c_ = c_.reshape(-1, m.n_groups, m.d_state)
+    rep = nh // m.n_groups
+    bh = jnp.repeat(b_, rep, axis=1).astype(jnp.float32)    # (B,H,N)
+    ch = jnp.repeat(c_, rep, axis=1).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt0 = dt[:, 0]                                          # (B,H)
+    decay = jnp.exp(dt0 * a[None])                          # (B,H)
+    upd = jnp.einsum("bhp,bhn->bhpn", xh.astype(jnp.float32) * dt0[..., None], bh)
+    ssm = cache["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, ch).astype(x.dtype)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, :, None]
+    y = y.reshape(-1, 1, d_in)
+    y = rms_norm(p["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_cache = {"conv": window[:, 1:], "ssm": ssm}
+    return out, new_cache

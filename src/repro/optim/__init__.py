@@ -1,0 +1,1 @@
+from .adamw import OptConfig, OptState, apply_updates, init_opt_state  # noqa: F401

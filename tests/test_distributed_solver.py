@@ -1,0 +1,74 @@
+"""Distributed (shard_map) solver == single-device solver, plus
+straggler-tolerant reduce. Runs in a subprocess so the 8 fake XLA host
+devices never leak into other tests."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import *
+from repro.core.instances import sparse_instance, dense_instance, shard_key
+from repro.core.types import SolverConfig
+
+kp, q = sparse_instance(shard_key(4), n=1024, k=10, q=1, tightness=0.4)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = SolverConfig(reduce="bucketed", max_iters=20)
+
+res_d = solve_sharded(kp, mesh, cfg, q=q)
+res_l = solve(kp, cfg, q=q)
+
+np.testing.assert_allclose(np.asarray(res_d.lam), np.asarray(res_l.lam),
+                           rtol=2e-2, atol=2e-3)
+np.testing.assert_allclose(float(res_d.dual), float(res_l.dual), rtol=1e-2)
+assert np.all(np.asarray(res_d.r) <= np.asarray(kp.budgets) * (1 + 1e-4)), "dist feasibility"
+# primal within 2% (postprocess differs: bucketed vs exact projection)
+np.testing.assert_allclose(float(res_d.primal), float(res_l.primal), rtol=2e-2)
+
+# exact reduce distributed == local bit-for-bit on lam
+cfg_e = SolverConfig(reduce="exact", max_iters=10, postprocess=False)
+rd = solve_sharded(kp, mesh, cfg_e, q=q)
+rl = solve(kp, cfg_e, q=q)
+np.testing.assert_allclose(np.asarray(rd.lam), np.asarray(rl.lam), rtol=1e-5, atol=1e-6)
+
+# straggler mitigation: proceed with 75% of shards, still feasible + close
+cfg_s = SolverConfig(reduce="bucketed", max_iters=20, partial_fraction=0.75)
+rs = solve_sharded(kp, mesh, cfg_s, q=q)
+assert np.all(np.asarray(rs.r) <= np.asarray(kp.budgets) * (1 + 1e-4)), "straggler feasibility"
+np.testing.assert_allclose(float(rs.primal), float(res_l.primal), rtol=0.08)
+
+# presolve warm start in distributed mode converges in fewer iters
+cfg_p = SolverConfig(reduce="bucketed", max_iters=30, presolve_samples=64)
+rp = solve_sharded(kp, mesh, cfg_p, q=q)
+rc = solve_sharded(kp, mesh, cfg_p.replace(presolve_samples=0), q=q)
+assert int(rp.iters) <= int(rc.iters)
+
+# dense instance distributed
+kpd = dense_instance(shard_key(6), n=512, m=8, k=4, local="C223", tightness=0.25)
+rdd = solve_sharded(kpd, mesh, SolverConfig(reduce="bucketed", max_iters=15), q=0)
+assert np.all(np.asarray(rdd.r) <= np.asarray(kpd.budgets) * (1 + 1e-4))
+rdl = solve(kpd, SolverConfig(reduce="bucketed", max_iters=15), q=0)
+# distributed feasibility projection is bucketed (conservative): allow 4%
+np.testing.assert_allclose(float(rdd.primal), float(rdl.primal), rtol=4e-2)
+
+print("DISTRIBUTED-OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_solver_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
+        text=True, timeout=900, cwd=str(REPO),
+    )
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "DISTRIBUTED-OK" in out.stdout

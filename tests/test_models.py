@@ -1,0 +1,143 @@
+"""Architecture zoo: per-arch smoke tests + decode/prefill equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.models import model as M
+from repro.models import lm
+from repro.optim import OptConfig, init_opt_state
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = registry.names()
+
+
+def _batch(cfg, key, b=2, s=64):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    tgts = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks, "targets": tgts}
+    if cfg.kind == "encdec":
+        batch["frames"] = jax.random.normal(key, (b, 32, cfg.d_model), cfg.dtype)
+    if cfg.n_patches:
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.n_patches, cfg.d_model), cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_arch_smoke_train_and_decode(name):
+    """One reduced-config train step + one decode step: shapes, finiteness."""
+    cfg = registry.get(name).smoke()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(7))
+    opt_cfg = OptConfig(warmup=10)
+    ostate = init_opt_state(params, opt_cfg)
+    step = jax.jit(M.make_train_step(cfg, opt_cfg))
+    p2, o2, metrics = step(params, ostate, batch)
+    assert np.isfinite(float(metrics["loss"])), name
+    assert np.isfinite(float(metrics["grad_norm"])), name
+    # params actually moved
+    delta = sum(
+        float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert delta > 0, name
+
+    caches = M.init_cache(cfg, params, 2, 128, frames=batch.get("frames"))
+    dstep = jax.jit(M.make_decode_step(cfg))
+    logits, caches2 = dstep(params, caches, jnp.ones((2, 1), jnp.int32),
+                            jnp.int32(3))
+    assert logits.shape == (2, 1, cfg.vocab), name
+    assert bool(jnp.all(jnp.isfinite(logits))), name
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_arch_prefill_step(name):
+    cfg = registry.get(name).smoke()
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(3))
+    pf = jax.jit(M.make_prefill_step(cfg))
+    logits = pf(params, batch)
+    assert logits.shape == (2, cfg.vocab), name
+    assert bool(jnp.all(jnp.isfinite(logits))), name
+
+
+@pytest.mark.parametrize("name", ["yi-34b", "mamba2-370m", "deepseek-v2-236b",
+                                  "jamba-v0.1-52b", "gemma-2b"])
+def test_decode_matches_prefill(name):
+    """Token-by-token decode with cache must reproduce the teacher-forced
+    forward logits (validates SSD step vs chunked scan, MLA absorbed decode
+    vs materialised attention, GQA cache plumbing)."""
+    import dataclasses
+    cfg = registry.get(name).smoke().replace(remat=False)
+    if cfg.moe.n_experts:
+        # decode always routes with plain top-k; align the train path so the
+        # equivalence check exercises the cache plumbing, not the router
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, router="topk"))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, cfg.vocab)
+
+    h = lm.forward(params, cfg, toks)
+    head = params.get("head", params["embed"])
+    from repro.models.layers import unembed
+    ref_logits = np.asarray(unembed(head, h).astype(jnp.float32))  # (b,s,V)
+
+    caches = M.init_cache(cfg, params, b, s)
+    dstep = jax.jit(M.make_decode_step(cfg))
+    outs = []
+    for t in range(s):
+        logits, caches = dstep(params, caches, toks[:, t:t + 1], jnp.int32(t))
+        outs.append(np.asarray(logits.astype(jnp.float32))[:, 0])
+    got = np.stack(outs, axis=1)
+    np.testing.assert_allclose(got, ref_logits, rtol=2e-2, atol=2e-3)
+
+
+def test_long_500k_skip_rules():
+    """Skip accounting per DESIGN §Arch-applicability."""
+    runs, skips = [], []
+    cell = M.SHAPES["long_500k"]
+    for name in ARCHS:
+        cfg = registry.get(name)
+        (runs if M.cell_applicable(cfg, cell) is None else skips).append(name)
+    assert set(runs) == {"mamba2-370m", "jamba-v0.1-52b"}
+    assert len(skips) == 8
+
+
+@given(seed=st.integers(0, 2**31 - 1), q=st.integers(1, 3))
+@settings(max_examples=20, deadline=None)
+def test_scd_router_capacity_property(seed, q):
+    """The paper's router: expert load never exceeds capacity; per-token
+    choices never exceed Q (hypothesis sweep over logits)."""
+    from repro.core.moe_router import scd_route
+
+    key = jax.random.PRNGKey(seed)
+    t, e = 128, 8
+    logits = jax.random.normal(key, (t, e)) * 3.0
+    out = scd_route(logits, q=q, capacity_factor=1.1, iters=4)
+    cap = 1.1 * q * t / e
+    assert np.all(np.asarray(out.load) <= cap + 1e-6)
+    assert np.all(np.asarray(out.mask.sum(1)) <= q)
+    # combine weights only on assigned experts
+    assert np.all((np.asarray(out.combine) > 0) <= np.asarray(out.mask))
+
+
+def test_scd_router_balances_better_than_topk():
+    """Adversarially skewed logits: SCD pricing caps hot experts; plain
+    top-k overflows them."""
+    from repro.core.moe_router import scd_route, topk_route
+
+    key = jax.random.PRNGKey(0)
+    t, e = 256, 8
+    logits = jax.random.normal(key, (t, e))
+    logits = logits.at[:, 0].add(4.0)        # everyone loves expert 0
+    cap = 1.25 * 2 * t / e
+    scd = scd_route(logits, q=2, capacity_factor=1.25, iters=6)
+    topk = topk_route(logits, q=2)
+    assert float(topk.load.max()) > cap      # heuristic overflows
+    assert float(scd.load.max()) <= cap + 1e-6
+    # roughly as many total assignments (within the capacity bound)
+    assert float(scd.mask.sum()) >= 0.7 * float(topk.mask.sum())

@@ -1,0 +1,75 @@
+"""Roofline machinery: HLO collective parser, analytic model, report."""
+import json
+import pathlib
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_collective_parser_counts_ops():
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+  %ag = bf16[4,1024]{1,0} all-gather(%x), replica_groups={...}
+  %ar = f32[256]{0} all-reduce(%y), to_apply=%add
+  %rs = f32[2,8]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = bf16[16,128,64]{2,1,0} all-to-all(%w)
+  %cp = u8[32]{0} collective-permute(%v)
+  %mm = f32[128,128]{1,0} dot(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["counts"]["all-gather"] == 1
+    assert out["bytes"]["all-gather"] == 4 * 1024 * 2
+    assert out["bytes"]["all-reduce"] == 256 * 4
+    assert out["bytes"]["reduce-scatter"] == 16 * 4
+    assert out["bytes"]["all-to-all"] == 16 * 128 * 64 * 2
+    assert out["bytes"]["collective-permute"] == 32
+    assert out["total_bytes"] == sum(out["bytes"].values())
+
+
+def test_analytic_terms_sane():
+    from benchmarks.analytic import cell_terms
+    from repro.configs import registry
+    from repro.models import model as M
+
+    cfg = registry.get("yi-34b")
+    cell = M.SHAPES["train_4k"]
+    n_params = 34_000_000_000
+    t = cell_terms(cfg, cell, n_params, 256)
+    # 6*N*T/chips as the floor; remat+attention push above it
+    floor = 6.0 * n_params * cell.global_batch * cell.seq_len / 256
+    assert t.flops_per_chip >= floor
+    assert t.flops_per_chip < 3 * floor
+    # decode flops are ~ 2*N_active*B/chips
+    d = cell_terms(cfg, M.SHAPES["decode_32k"], n_params, 256)
+    assert d.flops_per_chip < t.flops_per_chip / 1e3
+    # train memory traffic dominated by 3x full weight reads per chip
+    assert t.bytes_per_chip > 3 * n_params * 2
+
+
+def test_active_params_moe():
+    from benchmarks.roofline import active_params
+    from repro.configs import registry
+
+    cfg = registry.get("deepseek-v2-236b")
+    total = 239_713_551_360
+    act = active_params(cfg, total)
+    # DeepSeek-V2 reports ~21B active of 236B total
+    assert 15e9 < act < 35e9, act
+
+
+@pytest.mark.skipif(
+    not (REPO / "reports/dryrun_full.json").exists(),
+    reason="dry-run report not generated")
+def test_full_report_complete_and_clean():
+    recs = json.load(open(REPO / "reports/dryrun_full.json"))
+    assert len(recs) == 80  # 10 archs x 4 shapes x 2 meshes
+    assert all(r["status"] in ("ok", "skipped") for r in recs)
+    oks = [r for r in recs if r["status"] == "ok"]
+    assert len(oks) == 64
+    for r in oks:
+        assert r["cost"]["flops"] > 0, r["arch"]
+        assert r["memory"]["fits_16gb_hbm"], (r["arch"], r["shape"], r["mesh"],
+                                              r["memory"])
+        assert r["collectives"]["total_bytes"] > 0
