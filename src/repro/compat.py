@@ -1,0 +1,59 @@
+"""Version-compatibility shims for the moving parts of the jax API.
+
+``shard_map`` became a stable top-level API (with the ``check_vma``
+kwarg) after the ``jax.experimental.shard_map`` era (``check_rep``
+kwarg). Every call site in this repo goes through this module so the
+repo runs on both sides of the rename.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax.sharding, "set_mesh"):
+    set_mesh = jax.sharding.set_mesh
+else:
+    def set_mesh(mesh):
+        # Pre-set_mesh jax: Mesh is itself the context manager that
+        # installs the global resource env.
+        return mesh
+
+
+if hasattr(jax.sharding, "get_abstract_mesh"):
+    get_abstract_mesh = jax.sharding.get_abstract_mesh
+else:
+    def get_abstract_mesh():
+        # Pre-AbstractMesh jax: the context mesh installed by
+        # ``with mesh:`` is the thread-local physical mesh. It exposes
+        # the same .empty/.axis_names/.axis_sizes surface the call
+        # sites use, and unlike an AbstractMesh it is directly usable
+        # as the mesh argument of the era's shard_map.
+        from jax._src import mesh as _mesh
+        return _mesh.thread_resources.env.physical_mesh
+
+
+def as_shardings(mesh, tree):
+    """Make a PartitionSpec pytree acceptable to jax.jit shardings args.
+
+    Post-set_mesh jax resolves bare PartitionSpecs against the context
+    mesh; older jax requires concrete NamedShardings. None leaves (an
+    unconstrained subtree) pass through untouched on both.
+    """
+    if hasattr(jax.sharding, "set_mesh"):
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, PartitionSpec)
+        else s,
+        tree,
+        is_leaf=lambda s: isinstance(s, PartitionSpec),
+    )
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

@@ -51,7 +51,8 @@ def bucket_histogram(v1, v2, edges):
     v1, v2: (n, K) candidate thresholds / incremental consumptions
     (invalid candidates carry v2 == 0). edges: (K, E). Returns
     (K, E+1) f32 histogram; bucket j holds mass of candidates with
-    edges[j-1] <= v1 < edges[j] (open ladder at both ends).
+    edges[j-1] < v1 <= edges[j] (open ladder at both ends; the
+    searchsorted-left tie convention, shared with the Pallas kernels).
     """
     n, k = v1.shape
     e = edges.shape[-1]

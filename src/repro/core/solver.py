@@ -8,9 +8,13 @@ vector), and the multiplier update is replicated. Distribution is explicit
 mesh axes; ``mesh=None`` runs the identical code path on one device.
 
 Deviations from the paper's Spark driver are listed in DESIGN.md §6:
-notably the T-iteration loop is a ``lax.scan`` inside the program (no
-per-iteration job scheduling), with converged iterations frozen so the
-recorded iteration count matches Alg 2/4 semantics.
+notably the T-iteration loop runs inside the program (no per-iteration
+job scheduling) — a ``lax.while_loop`` that exits at convergence, or,
+when per-iteration history is recorded, a fixed-length ``lax.scan`` with
+converged iterations frozen so the recorded iteration count matches
+Alg 2/4 semantics. With ``cfg.use_kernels`` the sparse bucketed path runs
+map + reduce as one fused Pallas kernel (kernels/scd_fused.py): only the
+(K, E+1) histogram leaves the chip, never the (n, K) candidates.
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from .bucketing import (
     bucket_histogram,
     exact_threshold,
@@ -89,9 +94,8 @@ def _scd_candidates(kp, lam, q, cfg=None):
         if cfg is not None and cfg.use_kernels:
             from ..kernels import ops as kops
             n = kp.p.shape[0]
-            tile = next(t for t in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
-                        if n % t == 0)
-            return kops.scd_candidates(kp.p, kp.b, lam, q, tile_n=tile)
+            return kops.scd_candidates(kp.p, kp.b, lam, q,
+                                       tile_n=kops.pick_tile(n))
         return candidates_sparse(kp.p, kp.b, lam, q)       # (n, K)
     v1, v2 = candidates_general(kp.p, kp.b, lam, kp.sets, kp.caps)
     n, k, pp = v1.shape
@@ -110,16 +114,31 @@ def _scd_reduce(v1, v2, lam, budgets, cfg, axis):
     edges = make_edges(lam, cfg.bucket_delta, cfg.bucket_growth, cfg.bucket_half)
     if cfg.use_kernels:
         from ..kernels import ops as kops
-        n = v1.shape[0]
-        tile = next(t for t in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1)
-                    if n % t == 0)
-        hist = kops.bucket_hist(v1, v2, edges, tile_n=tile)
+        hist = kops.bucket_hist(v1, v2, edges,
+                                tile_n=kops.pick_tile(v1.shape[0]))
     else:
         hist = bucket_histogram(v1, v2, edges)
     top = jnp.max(v1, axis=0)
     hist = _psum(hist, axis)
     top = jax.lax.pmax(top, axis) if axis is not None else top
     return threshold_from_hist(hist, edges, budgets, top)
+
+
+def _scd_step_fused(kp, lam, q, keep, scale, cfg, axis):
+    """Map + bucketed reduce in ONE Pallas kernel (sparse GKP hot path).
+
+    The (n, K) candidate arrays stay in VMEM; only the (K, E+1) histogram
+    and the (K,) running max reach HBM / the mesh collective. The
+    straggler mask multiplies the histogram instead of v2 — the histogram
+    is linear in v2, so the estimator is unchanged.
+    """
+    from ..kernels import ops as kops
+    edges = make_edges(lam, cfg.bucket_delta, cfg.bucket_growth, cfg.bucket_half)
+    hist, top = kops.scd_fused_hist(kp.p, kp.b, lam, edges, q,
+                                    tile_n=kops.pick_tile(kp.p.shape[0]))
+    hist = _psum(hist * (keep * scale), axis)
+    top = jax.lax.pmax(top, axis) if axis is not None else top
+    return threshold_from_hist(hist, edges, kp.budgets, top)
 
 
 def _scd_update(kp, lam, q, cfg, axis):
@@ -130,13 +149,21 @@ def _scd_update(kp, lam, q, cfg, axis):
     updated multipliers (classic Gauss-Seidel CD; §4.3.2's other mode).
     """
     keep, scale = _straggler_mask(cfg, axis)
+    fused = (isinstance(kp, SparseKP) and cfg.use_kernels
+             and cfg.reduce == "bucketed")
     if cfg.cd_mode == "cyclic":
         k = kp.budgets.shape[0]
         for kk in range(k):
-            v1, v2 = _scd_candidates(kp, lam, q, cfg)
-            lam_k = _scd_reduce(v1, v2 * keep * scale, lam, kp.budgets, cfg, axis)[kk]
+            if fused:
+                lam_k = _scd_step_fused(kp, lam, q, keep, scale, cfg, axis)[kk]
+            else:
+                v1, v2 = _scd_candidates(kp, lam, q, cfg)
+                lam_k = _scd_reduce(v1, v2 * keep * scale, lam, kp.budgets,
+                                    cfg, axis)[kk]
             lam = lam.at[kk].set(lam_k)
         return lam
+    if fused:
+        return _scd_step_fused(kp, lam, q, keep, scale, cfg, axis)
     v1, v2 = _scd_candidates(kp, lam, q, cfg)
     return _scd_reduce(v1, v2 * keep * scale, lam, kp.budgets, cfg, axis)
 
@@ -160,9 +187,13 @@ def _dd_update(kp, lam, q, cfg, axis):
     return jnp.maximum(lam + cfg.dd_lr * (r - kp.budgets), 0.0)
 
 
-def dual_objective(kp, lam, q, axis=None):
-    """g(lam) = sum_i max_x [ p~ . x_i ] + lam . B  (upper bounds the IP)."""
-    x, _ = _solve_primal(kp, lam, q)
+def dual_objective(kp, lam, q, axis=None, primal=None):
+    """g(lam) = sum_i max_x [ p~ . x_i ] + lam . B  (upper bounds the IP).
+
+    ``primal`` optionally passes a precomputed ``_solve_primal`` result so
+    callers that already ran the map pass at lam don't run it twice.
+    """
+    x, _ = _solve_primal(kp, lam, q) if primal is None else primal
     if isinstance(kp, SparseKP):
         ap = kp.p - lam[None, :] * kp.b
         per_user = jnp.sum(jnp.where(x, ap, 0.0), axis=-1)
@@ -177,22 +208,24 @@ def dual_objective(kp, lam, q, axis=None):
 # Driver.
 # --------------------------------------------------------------------------
 
-def _metrics(kp, lam, q, axis, cfg):
+def _metrics(kp, lam, q, axis):
     x, cons = _solve_primal(kp, lam, q)
     r = _psum(jnp.sum(cons, axis=0), axis)
-    primal = _psum(
-        jnp.sum(jnp.where(x, kp.p, 0.0))
-        if isinstance(kp, SparseKP)
-        else jnp.sum(jnp.where(x, kp.p, 0.0)),
-        axis,
-    )
-    dual = dual_objective(kp, lam, q, axis)
+    primal = _psum(jnp.sum(jnp.where(x, kp.p, 0.0)), axis)
+    dual = dual_objective(kp, lam, q, axis, primal=(x, cons))
     viol = jnp.max(jnp.maximum(r - kp.budgets, 0.0) / kp.budgets)
     return x, cons, r, primal, dual, viol
 
 
 def _solve_local(kp, lam0, q, cfg, axis=None):
-    """The full solve on one shard (axis=None) or inside shard_map."""
+    """The full solve on one shard (axis=None) or inside shard_map.
+
+    record_history=True runs a fixed-length ``lax.scan`` (converged
+    iterations frozen) so every recorded trace has ``max_iters`` rows.
+    record_history=False runs the same step inside a ``lax.while_loop``
+    that exits at convergence — no frozen iterations are computed. Both
+    drivers share ``step``, so lam / iters trajectories are identical.
+    """
     update = _scd_update if cfg.algo == "scd" else _dd_update
 
     def step(carry, _):
@@ -203,7 +236,7 @@ def _solve_local(kp, lam0, q, cfg, axis=None):
         it_next = it + jnp.where(done, 0, 1).astype(jnp.int32)
         done_next = done | ~moved
         if cfg.record_history:
-            _, _, r, primal, dual, viol = _metrics(kp, lam_next, q, axis, cfg)
+            _, _, r, primal, dual, viol = _metrics(kp, lam_next, q, axis)
             rec = {
                 "lam": lam_next,
                 "primal": primal,
@@ -216,10 +249,20 @@ def _solve_local(kp, lam0, q, cfg, axis=None):
         return (lam_next, it_next, done_next), rec
 
     init = (lam0, jnp.int32(0), jnp.asarray(False))
-    (lam, iters, _), hist = jax.lax.scan(step, init, None, length=cfg.max_iters)
+    if cfg.record_history:
+        (lam, iters, _), hist = jax.lax.scan(
+            step, init, None, length=cfg.max_iters
+        )
+    else:
+        (lam, iters, _) = jax.lax.while_loop(
+            lambda c: (c[1] < cfg.max_iters) & ~c[2],
+            lambda c: step(c, None)[0],
+            init,
+        )
+        hist = None
 
     # Final primal + §5.4 feasibility projection.
-    x, cons, r, primal, dual, _ = _metrics(kp, lam, q, axis, cfg)
+    x, cons, r, primal, dual, _ = _metrics(kp, lam, q, axis)
     if cfg.postprocess:
         pt = group_profit(kp.p, cons, lam, x)
         if axis is None:
@@ -303,7 +346,7 @@ def solve_sharded(kp, mesh, cfg: SolverConfig = SolverConfig(), q: int = 1,
             "max_violation": P(),
         },
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(_solve_entry, q=q, cfg=cfg, axis=axes),
         mesh=mesh,
         in_specs=(in_kp_specs, P()),

@@ -3,6 +3,14 @@
 adjusted_topc   — fused adjusted-profit + top-Q select + consumption (DD map)
 scd_candidates  — Algorithm 5 linear-time candidate generation (SCD map)
 bucket_hist     — Section 5.2 bucketed-reduce histogram (SCD reduce, map side)
+scd_fused_hist  — scd_candidates + bucket_hist in one streaming pass: the
+                  (n, K) candidate intermediates never leave VMEM
 """
 from . import ops, ref  # noqa: F401
-from .ops import adjusted_topc, bucket_hist, scd_candidates  # noqa: F401
+from .ops import (  # noqa: F401
+    adjusted_topc,
+    bucket_hist,
+    pick_tile,
+    scd_candidates,
+    scd_fused_hist,
+)

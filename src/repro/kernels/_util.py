@@ -1,0 +1,15 @@
+"""Shared helpers for the kernel wrappers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_rows(x, pad, value=0.0):
+    """Append ``pad`` constant rows on the user axis (no-op if pad == 0).
+
+    Wrappers pad ragged shards up to a tile multiple; the pad values are
+    chosen per kernel so padded rows are inert (see each caller).
+    """
+    if not pad:
+        return x
+    return jnp.pad(x, ((0, pad), (0, 0)), constant_values=value)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._util import pad_rows
+
 
 def _topq_mask(ap, q):
     """(tile_n, K) -> bool mask of top-q positive entries, min-index ties."""
@@ -57,10 +59,14 @@ def adjusted_topc(p, b, lam, q, tile_n=512, interpret=None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     tile_n = min(tile_n, n)
-    assert n % tile_n == 0, (n, tile_n)
-    grid = (n // tile_n,)
+    # Ragged n: padded rows have ap = 0, never strictly positive, so the
+    # top-q mask is all-False there; slice the outputs back.
+    pad = -n % tile_n
+    p = pad_rows(p, pad)
+    b = pad_rows(b, pad)
+    grid = ((n + pad) // tile_n,)
     lam2 = lam.reshape(1, k).astype(p.dtype)
-    return pl.pallas_call(
+    x, v = pl.pallas_call(
         functools.partial(_kernel, q=q),
         grid=grid,
         in_specs=[
@@ -73,8 +79,9 @@ def adjusted_topc(p, b, lam, q, tile_n=512, interpret=None):
             pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, k), jnp.bool_),
-            jax.ShapeDtypeStruct((n, k), p.dtype),
+            jax.ShapeDtypeStruct((n + pad, k), jnp.bool_),
+            jax.ShapeDtypeStruct((n + pad, k), p.dtype),
         ],
         interpret=interpret,
     )(p, b, lam2)
+    return (x[:n], v[:n]) if pad else (x, v)

@@ -7,7 +7,7 @@ block; TPU grids execute sequentially, so ``out += tile`` is safe), and is
 exactly the array the solver psums across the mesh — i.e. this kernel IS
 the map-side of the paper's communication-compression trick.
 
-Binning is branch-free: bucket index = #(edges <= v1), computed as a sum
+Binning is branch-free: bucket index = #(edges < v1), computed as a sum
 of compares against the edge ladder; accumulation is a (tile_n x nb)
 one-hot contraction on the MXU.
 """
@@ -19,20 +19,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._util import pad_rows
 
-def _kernel(v1_ref, v2_ref, edges_ref, out_ref):
-    v1 = v1_ref[...]                                      # (tile_n, K)
-    v2 = v2_ref[...].astype(jnp.float32)
-    edges = edges_ref[...]                                # (K, E)
+
+def hist_block(v1, v2, edges):
+    """(tile_n, K) candidates -> (K, E+1) bucket-mass block, in f32.
+
+    idx[n, k] = number of edges < v1, in [0, E]: bucket j holds
+    edges[j-1] < v1 <= edges[j] — the same tie convention as
+    searchsorted(side="left") so kernel and jnp reduces agree when a
+    candidate lands exactly on an edge. Shared by this kernel and the
+    fused map+reduce kernel (scd_fused.py).
+    """
     tile_n, k = v1.shape
     e = edges.shape[-1]
     nb = e + 1
-    # idx[n, k] = number of edges <= v1 (open ladder) in [0, E]
-    ge = v1[:, :, None] >= edges[None, :, :]              # (tile_n, K, E)
-    idx = ge.sum(axis=-1).astype(jnp.int32)               # (tile_n, K)
+    gt = v1[:, :, None] > edges[None, :, :]               # (tile_n, K, E)
+    idx = gt.sum(axis=-1).astype(jnp.int32)               # (tile_n, K)
     buckets = jax.lax.broadcasted_iota(jnp.int32, (tile_n, k, nb), 2)
     onehot = (buckets == idx[:, :, None]).astype(jnp.float32)
-    tile_hist = jnp.einsum("nkb,nk->kb", onehot, v2)      # (K, nb)
+    return jnp.einsum("nkb,nk->kb", onehot, v2.astype(jnp.float32))
+
+
+def _kernel(v1_ref, v2_ref, edges_ref, out_ref):
+    tile_hist = hist_block(v1_ref[...], v2_ref[...], edges_ref[...])
 
     @pl.when(pl.program_id(0) == 0)
     def _init():
@@ -49,8 +59,11 @@ def bucket_hist(v1, v2, edges, tile_n=512, interpret=None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     tile_n = min(tile_n, n)
-    assert n % tile_n == 0, (n, tile_n)
-    grid = (n // tile_n,)
+    # Ragged n: padded rows carry v2 = 0, i.e. zero mass in every bucket.
+    pad = -n % tile_n
+    v1 = pad_rows(v1, pad, value=-1.0)
+    v2 = pad_rows(v2, pad)
+    grid = ((n + pad) // tile_n,)
     return pl.pallas_call(
         _kernel,
         grid=grid,

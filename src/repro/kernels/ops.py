@@ -14,6 +14,26 @@ from . import ref
 from .adjusted_topc import adjusted_topc as _adjusted_topc
 from .bucket_hist import bucket_hist as _bucket_hist
 from .scd_candidates import scd_candidates as _scd_candidates
+from .scd_fused import scd_fused_hist as _scd_fused_hist
+
+_TILE_LADDER = (512, 256, 128)
+
+
+def pick_tile(n, max_tile=512):
+    """User-axis tile for a shard of n rows.
+
+    Prefers the largest ladder tile that divides n (no padding, full
+    sublane occupancy). Otherwise the shard runs as a single tile
+    (n <= max_tile) or as max_tile-sized tiles with the ragged tail
+    padded inside the kernel wrappers. The ladder stops at 128: a
+    smaller dividing tile would serialise the grid (n=100000 -> 3125
+    steps at tile 32 vs 196 padded steps at tile 512), which costs far
+    more than <= tile-1 inert padded rows.
+    """
+    for t in _TILE_LADDER:
+        if t <= max_tile and n % t == 0:
+            return t
+    return min(max_tile, max(n, 1))
 
 
 def adjusted_topc(p, b, lam, q, use_pallas=True, **kw):
@@ -35,3 +55,14 @@ def bucket_hist(v1, v2, edges, use_pallas=True, **kw):
     if not use_pallas:
         return ref.bucket_hist_ref(v1, v2, edges)
     return _bucket_hist(v1, v2, edges, **kw)
+
+
+def scd_fused_hist(p, b, lam, edges, q, use_pallas=True, **kw):
+    """Fused Alg-5 map + §5.2 histogram: (hist (K, E+1), top (K,)).
+
+    The candidate (v1, v2) intermediates never leave VMEM — this is the
+    solver's bucketed-reduce hot path when ``cfg.use_kernels``.
+    """
+    if not use_pallas:
+        return ref.scd_fused_hist_ref(p, b, lam, edges, q)
+    return _scd_fused_hist(p, b, lam, edges, q, **kw)

@@ -47,11 +47,22 @@ def scd_candidates_ref(p, b, lam, q):
     return v1.astype(p.dtype), v2.astype(p.dtype)
 
 
+def scd_fused_hist_ref(p, b, lam, edges, q):
+    """Fused SCD map+reduce oracle: the unfused two-stage composition.
+
+    Returns (hist (K, E+1), top (K,)) where hist is
+    ``bucket_hist_ref(*scd_candidates_ref(p, b, lam, q), edges)`` and top
+    is the per-knapsack max candidate value max(v1, axis=0).
+    """
+    v1, v2 = scd_candidates_ref(p, b, lam, q)
+    return bucket_hist_ref(v1, v2, edges), jnp.max(v1, axis=0)
+
+
 def bucket_hist_ref(v1, v2, edges):
     """Section 5.2 histogram: mass of v2 per (knapsack, bucket).
 
     v1, v2: (n, K); edges: (K, E) ascending. Bucket j of row k holds
-    candidates with edges[k, j-1] <= v1 < edges[k, j]; returns (K, E+1).
+    candidates with edges[k, j-1] < v1 <= edges[k, j]; returns (K, E+1).
     """
     n, k = v1.shape
     e = edges.shape[-1]

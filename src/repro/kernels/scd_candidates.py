@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._util import pad_rows
+
 
 def _order_stats(ap, q):
     """(n,K) -> (q_th (n,1), q1_th (n,1)) largest values (with multiplicity)."""
@@ -38,12 +40,15 @@ def _order_stats(ap, q):
     return q_th, q1_th
 
 
-def _kernel(p_ref, b_ref, lam_ref, v1_ref, v2_ref, *, q):
-    p = p_ref[...]
-    b = b_ref[...]
-    lam = lam_ref[...]                                        # (1, K)
+def candidates_block(p, b, lam, q):
+    """Alg 5 candidate pairs (v1, v2) for one VMEM-resident block.
+
+    p, b: (tile_n, K); lam: (1, K). Invalid candidates are encoded as
+    v1 = -1, v2 = 0. Shared by this kernel and the fused map+reduce
+    kernel (scd_fused.py) so the tie-sensitive semantics exist once.
+    """
     ap = jnp.maximum(p - lam * b, 0.0)
-    n, k = p.shape
+    k = p.shape[-1]
     if q >= k:
         pbar = jnp.zeros_like(ap)
     else:
@@ -52,8 +57,15 @@ def _kernel(p_ref, b_ref, lam_ref, v1_ref, v2_ref, *, q):
         pbar = jnp.where(in_top, q1_th, q_th)
     valid = (p > pbar) & (b > 0)
     safe_b = jnp.where(b > 0, b, jnp.ones_like(b))
-    v1_ref[...] = jnp.where(valid, (p - pbar) / safe_b, -jnp.ones_like(p))
-    v2_ref[...] = jnp.where(valid, b, jnp.zeros_like(b))
+    v1 = jnp.where(valid, (p - pbar) / safe_b, -jnp.ones_like(p))
+    v2 = jnp.where(valid, b, jnp.zeros_like(b))
+    return v1, v2
+
+
+def _kernel(p_ref, b_ref, lam_ref, v1_ref, v2_ref, *, q):
+    v1, v2 = candidates_block(p_ref[...], b_ref[...], lam_ref[...], q)
+    v1_ref[...] = v1
+    v2_ref[...] = v2
 
 
 @functools.partial(jax.jit, static_argnames=("q", "tile_n", "interpret"))
@@ -63,10 +75,14 @@ def scd_candidates(p, b, lam, q, tile_n=512, interpret=None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     tile_n = min(tile_n, n)
-    assert n % tile_n == 0, (n, tile_n)
-    grid = (n // tile_n,)
+    # Ragged n: pad with (p=0, b=0) rows — invalid candidates (v1=-1,
+    # v2=0) by construction — and slice the outputs back.
+    pad = -n % tile_n
+    p = pad_rows(p, pad)
+    b = pad_rows(b, pad)
+    grid = ((n + pad) // tile_n,)
     lam2 = lam.reshape(1, k).astype(p.dtype)
-    return pl.pallas_call(
+    v1, v2 = pl.pallas_call(
         functools.partial(_kernel, q=q),
         grid=grid,
         in_specs=[
@@ -79,8 +95,9 @@ def scd_candidates(p, b, lam, q, tile_n=512, interpret=None):
             pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n, k), p.dtype),
-            jax.ShapeDtypeStruct((n, k), p.dtype),
+            jax.ShapeDtypeStruct((n + pad, k), p.dtype),
+            jax.ShapeDtypeStruct((n + pad, k), p.dtype),
         ],
         interpret=interpret,
     )(p, b, lam2)
+    return (v1[:n], v2[:n]) if pad else (v1, v2)

@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map
 from repro.configs import registry
 from repro.configs.paper_kp import WORKLOADS
 from repro.launch.mesh import make_production_mesh
@@ -167,12 +169,14 @@ def lower_cell(arch: str, shape: str, multi_pod: bool, probe: bool = True,
               "mesh": "2x16x16" if multi_pod else "16x16", "status": "ok",
               "fsdp_mode": cfg.fsdp_mode, "router": cfg.moe.router or None,
               "global_batch": cell.global_batch}
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         sharding.set_rules(rules)
         try:
             pshape = jax.eval_shape(
                 lambda k: M.init(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
             pspecs, ospecs, bspecs = M.shardings(cfg, cell, multi_pod)
+            pspecs, ospecs, bspecs = compat.as_shardings(
+                mesh, (pspecs, ospecs, bspecs))
             inputs = _abstract(M.input_specs(cfg, cell))
 
             if cell.kind == "train":
@@ -258,7 +262,8 @@ def _probe_block(cfg, cell, mesh, multi_pod):
         x_spec = M.sanitize(
             P(rules["batch"], rules["seq"], None), x_sds.shape)
         lowered = jax.jit(
-            probe_fn, in_shardings=(pspecs, x_spec),
+            probe_fn,
+            in_shardings=compat.as_shardings(mesh, (pspecs, x_spec)),
         ).lower(pshape, x_sds)
     else:
         # decode probe: one period of block_decode
@@ -291,7 +296,8 @@ def _probe_block(cfg, cell, mesh, multi_pod):
         x_spec = M.sanitize(P(rules["batch"], None, None), x_sds.shape)
         lowered = jax.jit(
             probe_fn,
-            in_shardings=(pspecs, cspecs, x_spec, P()),
+            in_shardings=compat.as_shardings(
+                mesh, (pspecs, cspecs, x_spec, P())),
         ).lower(pshape, cshape, x_sds, jax.ShapeDtypeStruct((), jnp.int32))
 
     compiled = lowered.compile()
@@ -332,7 +338,7 @@ def lower_paper_kp(workload: str, multi_pod: bool = True,
     user = P(axes)
     # out_specs: lam/iters/r/primal/dual replicated; x user-sharded
     from repro.core.solver import SolveResult
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(_solve_entry, q=wl.q, cfg=cfg, axis=axes),
         mesh=mesh,
         in_specs=(SparseKP(p=user, b=user, budgets=P()), P()),

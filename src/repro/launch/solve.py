@@ -61,6 +61,9 @@ def main():
     ap.add_argument("--reduce", choices=["bucketed", "exact"], default="bucketed")
     ap.add_argument("--presolve", type=int, default=0)
     ap.add_argument("--max-iters", type=int, default=40)
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="Pallas kernel path (fused map+reduce for the "
+                         "sparse bucketed solve; interpret mode off-TPU)")
     args = ap.parse_args()
 
     wl = WORKLOADS[args.workload]
@@ -68,7 +71,8 @@ def main():
     wl = KPWorkload(wl.name, n, args.k or wl.k, args.q or wl.q, wl.tightness)
     cfg = SolverConfig(algo=args.algo, reduce=args.reduce,
                        max_iters=args.max_iters,
-                       presolve_samples=args.presolve)
+                       presolve_samples=args.presolve,
+                       use_kernels=args.use_kernels)
     out = run(wl, cfg)
     for k, v in out.items():
         print(f"{k}: {v}")

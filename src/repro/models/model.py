@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import get_abstract_mesh
 from ..optim import OptConfig, apply_updates, init_opt_state
 from . import encdec as ed
 from . import lm, sharding
@@ -217,7 +218,7 @@ def production_rules(multi_pod: bool, fsdp_mode: str = "full"):
 
 
 def _axis_sizes() -> dict:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return {"pod": 2, "data": 16, "model": 16}
     return dict(zip(mesh.axis_names, mesh.axis_sizes))

@@ -22,6 +22,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
+from ..compat import get_abstract_mesh
 from ..core.moe_router import scd_route, topk_route
 from .layers import truncnorm
 from . import sharding
@@ -82,7 +84,7 @@ def moe_train(p, cfg, x, act="silu"):
     if rules is None or model_ax is None:
         return _moe_local(p, cfg, x, act)
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     batch_ax = sharding.mesh_axis("batch")
     seq_ax = sharding.mesh_axis("seq")
     P = jax.sharding.PartitionSpec
@@ -104,7 +106,7 @@ def moe_train(p, cfg, x, act="silu"):
     def body(pp, xx):
         return _moe_a2a(pp, cfg, xx, act, model_ax, all_axes)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(p_spec, x_spec), out_specs=x_spec,
         check_vma=False,
     )(p, x)

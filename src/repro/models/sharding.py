@@ -18,6 +18,8 @@ import threading
 from typing import Optional
 
 import jax
+
+from ..compat import get_abstract_mesh
 from jax.sharding import PartitionSpec as P
 
 _state = threading.local()
@@ -77,7 +79,7 @@ def axis_size(logical: str) -> int:
     ax = mesh_axis(logical)
     if ax is None:
         return 1
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return 1
     names = ax if isinstance(ax, tuple) else (ax,)
