@@ -1,0 +1,147 @@
+"""Out-of-core chunked solve: device memory flat in n, past the HBM cap.
+
+``PYTHONPATH=src python -m benchmarks.bench_chunked [--smoke] [--out PATH]``
+
+The paper's billion-scale claim holds only if per-worker state is
+O(items processed at a time), not O(local items). This benchmark
+demonstrates that for the streaming driver (core/chunked.py):
+
+* **solves** the §6 sparse workload through the fused Pallas kernel at
+  n from the largest unchunked BENCH_scd.json point (32768) up to 8-16x
+  past it, chunks synthesized on demand — the (n, K) instance never
+  exists;
+* **AOT memory analysis** (same probe as launch/dryrun.py) of the
+  compiled streaming program at each n: argument + temp bytes must be
+  flat in n (the scan carries O(chunk·K + K·E) state and a loop
+  counter), while the resident ``solve`` program's bytes grow as
+  8·n·K + intermediates — its device-memory ceiling is exactly what the
+  streaming path removes.
+
+The CI smoke gate fails if the streaming program's footprint is not flat
+(<= 1% drift across n) or if the big-n solve regresses infeasible.
+Writes ``BENCH_chunked.json`` next to ``BENCH_scd.json`` so later PRs
+can diff the trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import SolverConfig, SparseKP  # noqa: E402
+from repro.core.chunked import stream_solve_fn  # noqa: E402
+from repro.core.solver import _solve_entry  # noqa: E402
+from repro.data.synth import sparse_chunk_source  # noqa: E402
+
+K, Q, CHUNK = 8, 1, 8192
+# Largest unchunked point in BENCH_scd.json is n=32768; the acceptance
+# bar is a solve at >= 8x that with flat peak device memory.
+GRID = [32768, 65536, 131072, 262144, 524288]
+SMOKE_GRID = [32768, 65536]
+
+
+def _cfg(use_kernels=True, max_iters=12):
+    return SolverConfig(reduce="bucketed", max_iters=max_iters,
+                        use_kernels=use_kernels)
+
+
+def _streaming_fn(src, cfg):
+    return stream_solve_fn(src, cfg, Q)
+
+
+def _aot_bytes(lowered):
+    """argument + temp bytes of a compiled program (dryrun.py calibration:
+    both are per-device on this backend); -1 when the backend can't say."""
+    try:
+        ma = lowered.compile().memory_analysis()
+        arg = int(getattr(ma, "argument_size_in_bytes", -1))
+        temp = int(getattr(ma, "temp_size_in_bytes", -1))
+        return {"argument_bytes": arg, "temp_bytes": temp,
+                "total_bytes": arg + temp}
+    except Exception as e:  # pragma: no cover - CPU backend quirks
+        return {"error": str(e), "total_bytes": -1}
+
+
+def bench_point(n, seed=0, use_kernels=True, max_iters=12):
+    """Solve the n-user workload streaming; report wall time + AOT bytes."""
+    cfg = _cfg(use_kernels, max_iters)
+    src = sparse_chunk_source(seed, n, K, CHUNK, q=Q, tightness=0.4)
+    fn = _streaming_fn(src, cfg)
+    lam0 = jnp.ones((K,), jnp.float32)
+
+    stream_mem = _aot_bytes(fn.lower(src.budgets, lam0))
+    # Resident-solve footprint at the same n: the ceiling being removed.
+    resident = jax.jit(functools.partial(
+        _solve_entry, q=Q, cfg=cfg.replace(use_kernels=False), axis=None))
+    abstract = SparseKP(
+        p=jax.ShapeDtypeStruct((n, K), jnp.float32),
+        b=jax.ShapeDtypeStruct((n, K), jnp.float32),
+        budgets=jax.ShapeDtypeStruct((K,), jnp.float32),
+    )
+    resident_mem = _aot_bytes(resident.lower(abstract, lam0))
+
+    t0 = time.perf_counter()
+    res = jax.block_until_ready(fn(src.budgets, lam0))
+    wall = time.perf_counter() - t0
+    feasible = bool(jnp.all(res.r <= src.budgets * (1 + 1e-4)))
+    return {
+        "n": n, "k": K, "q": Q, "chunk": CHUNK,
+        "use_kernels": use_kernels,
+        "iterations": int(res.iters),
+        "duality_gap_frac": float((res.dual - res.primal) / res.primal),
+        "feasible": feasible,
+        "wall_s": round(wall, 4),
+        "streaming_memory": stream_mem,
+        "resident_memory": resident_mem,
+    }
+
+
+def main() -> None:
+    """Run the grid, write the JSON report, gate on flat memory."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="two small points (CI-friendly)")
+    ap.add_argument("--out", default="BENCH_chunked.json")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="jnp map instead of the fused Pallas kernel")
+    args = ap.parse_args()
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+
+    points = []
+    print("n,iters,wall_s,stream_bytes,resident_bytes,feasible")
+    for n in (SMOKE_GRID if args.smoke else GRID):
+        r = bench_point(n, use_kernels=not args.no_kernels)
+        points.append(r)
+        print(f"{n},{r['iterations']},{r['wall_s']},"
+              f"{r['streaming_memory']['total_bytes']},"
+              f"{r['resident_memory']['total_bytes']},{r['feasible']}")
+
+    totals = [p["streaming_memory"]["total_bytes"] for p in points]
+    flat = (min(totals) > 0 and max(totals) / min(totals) <= 1.01)
+    report = {
+        "backend": jax.default_backend(),
+        "chunk": CHUNK,
+        "largest_unchunked_n": 32768,   # BENCH_scd.json ceiling
+        "memory_flat_in_n": flat,
+        "points": points,
+    }
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+    bad = [p for p in points if not p["feasible"]]
+    if bad or not flat:
+        print(f"REGRESSION: feasible={not bad}, memory_flat_in_n={flat}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

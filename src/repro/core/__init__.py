@@ -3,6 +3,7 @@
 Public API:
     types.SparseKP / types.DenseKP / types.SolverConfig — instances + config
     solver.solve / solver.solve_sharded                 — DD (Alg 2) & SCD (Alg 4)
+    chunked.solve_streaming / chunked.ChunkSource       — out-of-core solves
     greedy.greedy_solve                                 — Alg 1 (laminar IP, optimal)
     sparse_scd.candidates_sparse                        — Alg 5 (linear-time map)
     bucketing.*                                         — §5.2 bucketed reduce
@@ -28,5 +29,12 @@ from .bucketing import (  # noqa: F401
     threshold_from_hist,
 )
 from .solver import SolveResult, dual_objective, solve, solve_sharded  # noqa: F401
+from .chunked import (  # noqa: F401
+    ChunkSource,
+    StreamResult,
+    array_source,
+    decisions_chunk,
+    solve_streaming,
+)
 from .instances import dense_instance, shard_key, sparse_instance  # noqa: F401
 from .moe_router import RouterOut, scd_route, topk_route  # noqa: F401

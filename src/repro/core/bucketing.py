@@ -45,7 +45,7 @@ def make_edges(lam_t, delta, growth, half):
     return jnp.concatenate([neg, lam_t[:, None], pos], axis=-1)
 
 
-def bucket_histogram(v1, v2, edges):
+def bucket_histogram(v1, v2, edges, init=None):
     """Accumulate candidate mass into per-knapsack buckets.
 
     v1, v2: (n, K) candidate thresholds / incremental consumptions
@@ -53,6 +53,15 @@ def bucket_histogram(v1, v2, edges):
     (K, E+1) f32 histogram; bucket j holds mass of candidates with
     edges[j-1] < v1 <= edges[j] (open ladder at both ends; the
     searchsorted-left tie convention, shared with the Pallas kernels).
+
+    ``init`` (K, E+1) seeds the accumulation: the rows of ``v1``/``v2``
+    are scatter-added *onto* it in row order. This is what makes the
+    chunked solve bit-identical to the unchunked one: XLA scatter-add
+    applies updates sequentially in operand order, so accumulating chunk
+    c's rows onto the running histogram of chunks < c performs exactly
+    the same f32 additions, in the same order, as one scatter over all n
+    rows. Adding chunks' sub-histograms with ``+`` instead would regroup
+    the sums and drift in the last ulp.
     """
     n, k = v1.shape
     e = edges.shape[-1]
@@ -60,9 +69,9 @@ def bucket_histogram(v1, v2, edges):
     # Per-knapsack searchsorted: vmap over K.
     idx = jax.vmap(jnp.searchsorted, in_axes=(0, 1))(edges, v1)  # (K, n)
     seg = idx + (jnp.arange(k, dtype=idx.dtype) * nb)[:, None]
-    hist = jax.ops.segment_sum(
-        v2.T.reshape(-1), seg.reshape(-1), num_segments=k * nb
-    )
+    acc = (jnp.zeros((k * nb,), jnp.float32) if init is None
+           else init.astype(jnp.float32).reshape(-1))
+    hist = acc.at[seg.reshape(-1)].add(v2.T.reshape(-1).astype(jnp.float32))
     return hist.reshape(k, nb)
 
 

@@ -16,13 +16,29 @@ removal set is exactly "buckets below an edge", the removed consumption is
 exactly the histogram prefix sum — the projection is conservative-exact
 (always feasible), only the removal granularity is bucketed. An exact
 sort-based mode is kept for single-shard use and tests.
+
+The bucketed path is decomposed into :func:`profit_edges`,
+:func:`removable_hist` and :func:`threshold_from_removable_hist` so the
+out-of-core driver (core/chunked.py) can stream the item dimension through
+it: edges from a first pass's global (lo, hi), the histogram accumulated
+chunk by chunk via carry-seeded scatter-add (bit-identical to the one-shot
+histogram — scatter updates apply in row order), then one constant-size
+threshold recovery. ``feasibility_threshold_bucketed`` composes the same
+three pieces for resident shards.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["group_profit", "feasibility_threshold_exact", "feasibility_threshold_bucketed"]
+__all__ = [
+    "group_profit",
+    "feasibility_threshold_exact",
+    "feasibility_threshold_bucketed",
+    "profit_edges",
+    "removable_hist",
+    "threshold_from_removable_hist",
+]
 
 
 def group_profit(p, cons, lam, x):
@@ -50,32 +66,69 @@ def feasibility_threshold_exact(ptilde, cons, budgets):
     return tau
 
 
+def profit_edges(lo, hi, n_edges=512):
+    """Fixed group-profit edge ladder between the global (lo, hi).
+
+    lo/hi must already be globally reduced (pmin/pmax across the mesh, or
+    a running min/max across chunks — both are exact, so the streaming
+    and resident paths build bit-identical edges). Returns (E,)."""
+    return jnp.linspace(lo, hi, n_edges)
+
+
+def removable_hist(ptilde, cons, edges, init=None):
+    """(K, E+1) removable-consumption mass per group-profit bucket.
+
+    ptilde: (n,), cons: (n, K), edges: (E,) ascending. Bucket j holds
+    sum of cons over groups with edges[j-1] < p~ <= edges[j]
+    (searchsorted-left, the repo-wide tie convention). ``init`` seeds the
+    accumulation for chunked streaming: rows scatter-add *onto* it in row
+    order, so accumulating chunks sequentially performs the identical f32
+    addition chain as one pass over all n rows (bit-identical results).
+    Invalid/padded rows must carry cons == 0 (their zero mass lands in
+    whatever bucket their p~ bins to, adding exactly 0.0)."""
+    n, k = cons.shape
+    n_edges = edges.shape[0]
+    idx = jnp.searchsorted(edges, ptilde, side="left")     # bucket i: (e[i-1], e[i]]
+    nb = n_edges + 1
+    seg = idx[:, None] + jnp.arange(k)[None, :] * nb
+    acc = (jnp.zeros((k * nb,), cons.dtype) if init is None
+           else init.reshape(-1))
+    return acc.at[seg.reshape(-1)].add(cons.reshape(-1)).reshape(k, nb)
+
+
+def threshold_from_removable_hist(hist, edges, r_total, budgets):
+    """Minimal edge tau whose prefix removal restores every budget.
+
+    hist: (K, E+1) (already psum'd / fully accumulated), edges: (E,),
+    r_total: (K,) global consumption, budgets: (K,). Removing
+    {i : p~_i <= edges[e]} removes exactly the histogram prefix sum, so
+    the projection is conservative-exact. Returns tau (-inf when already
+    feasible: nothing is removed)."""
+    n_edges = edges.shape[0]
+    excess = jnp.maximum(r_total - budgets, 0.0)
+    cum = jnp.cumsum(hist[:, :n_edges], axis=-1)           # (K, E)
+    feas_e = jnp.all(cum >= excess[:, None], axis=0)       # (E,)
+    need = jnp.any(excess > 0)
+    e_star = jnp.argmax(feas_e)                            # minimal feasible edge
+    return jnp.where(need, edges[e_star], -jnp.inf)
+
+
 def feasibility_threshold_bucketed(ptilde, cons, r_total, budgets, axis=None, n_edges=512):
     """Distributed tau via histogramming; guaranteed feasible removal.
 
     ptilde: (n,), cons: (n, K) shard-local; r_total: (K,) global consumption
-    (already psum'd); axis: mesh axis name(s) for the collectives.
+    (already psum'd); axis: mesh axis name(s) for the collectives. Composes
+    profit_edges -> removable_hist -> threshold_from_removable_hist; the
+    streaming driver runs the same pieces with the n rows arriving in
+    chunks instead.
     """
-    k = cons.shape[-1]
     lo = jnp.min(ptilde)
     hi = jnp.max(ptilde)
     if axis is not None:
         lo = jax.lax.pmin(lo, axis)
         hi = jax.lax.pmax(hi, axis)
-    edges = jnp.linspace(lo, hi, n_edges)                  # (E,)
-    idx = jnp.searchsorted(edges, ptilde, side="left")     # bucket i: (e[i-1], e[i]]
-    nb = n_edges + 1
-    seg = idx[:, None] + jnp.arange(k)[None, :] * nb
-    hist = jax.ops.segment_sum(
-        cons.reshape(-1), seg.reshape(-1), num_segments=k * nb
-    ).reshape(k, nb)
+    edges = profit_edges(lo, hi, n_edges)                  # (E,)
+    hist = removable_hist(ptilde, cons, edges)
     if axis is not None:
         hist = jax.lax.psum(hist, axis)
-    excess = jnp.maximum(r_total - budgets, 0.0)
-    # Removing {i : p~_i <= edges[e]} removes exactly cum[k, e].
-    cum = jnp.cumsum(hist[:, :n_edges], axis=-1)           # (K, E)
-    feas_e = jnp.all(cum >= excess[:, None], axis=0)       # (E,)
-    need = jnp.any(excess > 0)
-    e_star = jnp.argmax(feas_e)                            # minimal feasible edge
-    tau = jnp.where(need, edges[e_star], -jnp.inf)
-    return tau
+    return threshold_from_removable_hist(hist, edges, r_total, budgets)

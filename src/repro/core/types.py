@@ -18,7 +18,7 @@ donated and passed through jit/shard_map directly. Static structure
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -66,6 +66,11 @@ class SolverConfig:
     algo: "scd" (Alg 4) or "dd" (Alg 2).
     reduce: "bucketed" (Section 5.2 production path) or "exact"
         (bit-faithful Alg 4 reduce; gathers candidates, test scale only).
+    chunk_size: None runs the per-iteration map over the whole local shard
+        at once; an int streams the user axis through the map in fixed-size
+        chunks via ``lax.scan`` (see core/solver.py "Chunked map" and the
+        chunked-vs-unchunked contract in the ``solve`` docstring). Requires
+        ``reduce="bucketed"`` (the exact reduce must see all candidates).
     """
 
     algo: str = "scd"
@@ -76,6 +81,22 @@ class SolverConfig:
     reduce: str = "bucketed"
     max_iters: int = 32
     tol: float = 1e-3
+    # Per-coordinate damping applied to SCD when a multiplier's step
+    # reverses direction (delta_t * delta_{t-1} < 0): the step is scaled
+    # by this factor. Breaks the sync-CD period-2 limit cycle near the
+    # fixed point (bucket-interpolation wobble + Jacobi coupling) by
+    # geometrically shrinking oscillations below tol; monotone
+    # trajectories are untouched (no reversal, no damping), and DD is
+    # exempt (Alg 2's projected step must reach the lam = 0 boundary
+    # exactly). 1.0 disables.
+    cd_damping: float = 0.5
+    # Stream the per-iteration map over user chunks of this size (None =
+    # whole shard at once). See core/solver.py.
+    chunk_size: Optional[int] = None
+    # Override the kernel user-axis tile (None = kernels.ops.pick_tile).
+    # Chunked and unchunked kernel paths are bit-identical only when both
+    # run the same tile decomposition; tests pin this to compare them.
+    kernel_tile: Optional[int] = None
     # DD (Alg 2) learning rate.
     dd_lr: float = 1e-3
     # Section 5.2 bucketing: edges at lam_t +/- delta * growth**i,
@@ -98,6 +119,7 @@ class SolverConfig:
     dtype: jnp.dtype = jnp.float32
 
     def replace(self, **kw) -> "SolverConfig":
+        """Functional update: a copy with the given fields replaced."""
         return dataclasses.replace(self, **kw)
 
 

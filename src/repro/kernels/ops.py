@@ -61,8 +61,13 @@ def scd_fused_hist(p, b, lam, edges, q, use_pallas=True, **kw):
     """Fused Alg-5 map + §5.2 histogram: (hist (K, E+1), top (K,)).
 
     The candidate (v1, v2) intermediates never leave VMEM — this is the
-    solver's bucketed-reduce hot path when ``cfg.use_kernels``.
+    solver's bucketed-reduce hot path when ``cfg.use_kernels``. Pass
+    ``hist_init``/``top_init`` to seed the accumulators when scanning
+    user chunks (the chunked solve's bit-identity contract; the ref
+    oracle combines seeds at allclose level only).
     """
     if not use_pallas:
-        return ref.scd_fused_hist_ref(p, b, lam, edges, q)
+        return ref.scd_fused_hist_ref(
+            p, b, lam, edges, q,
+            hist_init=kw.get("hist_init"), top_init=kw.get("top_init"))
     return _scd_fused_hist(p, b, lam, edges, q, **kw)

@@ -47,15 +47,25 @@ def scd_candidates_ref(p, b, lam, q):
     return v1.astype(p.dtype), v2.astype(p.dtype)
 
 
-def scd_fused_hist_ref(p, b, lam, edges, q):
+def scd_fused_hist_ref(p, b, lam, edges, q, hist_init=None, top_init=None):
     """Fused SCD map+reduce oracle: the unfused two-stage composition.
 
     Returns (hist (K, E+1), top (K,)) where hist is
     ``bucket_hist_ref(*scd_candidates_ref(p, b, lam, q), edges)`` and top
-    is the per-knapsack max candidate value max(v1, axis=0).
+    is the per-knapsack max candidate value max(v1, axis=0). Optional
+    ``hist_init``/``top_init`` accumulator seeds are combined with
+    ``+``/``maximum`` (an allclose-level oracle for the kernel's seeded
+    accumulation, not a bit-exact one — the kernel folds the seed into
+    its tile chain instead of adding it afterwards).
     """
     v1, v2 = scd_candidates_ref(p, b, lam, q)
-    return bucket_hist_ref(v1, v2, edges), jnp.max(v1, axis=0)
+    hist = bucket_hist_ref(v1, v2, edges)
+    top = jnp.max(v1, axis=0)
+    if hist_init is not None:
+        hist = hist + hist_init
+    if top_init is not None:
+        top = jnp.maximum(top, top_init)
+    return hist, top
 
 
 def bucket_hist_ref(v1, v2, edges):

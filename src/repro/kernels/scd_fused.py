@@ -33,7 +33,8 @@ from .bucket_hist import hist_block
 from .scd_candidates import candidates_block
 
 
-def _kernel(p_ref, b_ref, lam_ref, edges_ref, hist_ref, top_ref, *, q):
+def _kernel(p_ref, b_ref, lam_ref, edges_ref, hist0_ref, top0_ref,
+            hist_ref, top_ref, *, q):
     # Alg 5 map, then the §5.2 binning — the same shared blocks the two
     # standalone kernels run, but v1/v2 stay in VMEM between them.
     v1, v2 = candidates_block(p_ref[...], b_ref[...], lam_ref[...], q)
@@ -42,21 +43,33 @@ def _kernel(p_ref, b_ref, lam_ref, edges_ref, hist_ref, top_ref, *, q):
 
     @pl.when(pl.program_id(0) == 0)
     def _init():
-        hist_ref[...] = jnp.zeros_like(hist_ref)
-        top_ref[...] = jnp.full_like(top_ref, -jnp.inf)
+        hist_ref[...] = hist0_ref[...]
+        top_ref[...] = top0_ref[...]
 
     hist_ref[...] += tile_hist
     top_ref[...] = jnp.maximum(top_ref[...], tile_top)
 
 
 @functools.partial(jax.jit, static_argnames=("q", "tile_n", "interpret"))
-def scd_fused_hist(p, b, lam, edges, q, tile_n=512, interpret=None):
+def scd_fused_hist(p, b, lam, edges, q, tile_n=512, interpret=None,
+                   hist_init=None, top_init=None):
     """Fused Alg-5 map + §5.2 histogram. No (n, K) intermediate in HBM.
 
     p, b: (n, K); lam: (K,); edges: (K, E) ascending. Returns
     (hist (K, E+1) f32, top (K,) p.dtype) — exactly
     ``bucket_hist(*scd_candidates(p, b, lam, q), edges)`` and
     ``max(v1, axis=0)``, with v1/v2 never materialised off-chip.
+
+    ``hist_init`` (K, E+1) / ``top_init`` (K,) seed the VMEM accumulators
+    (defaults: zeros / -inf, the unseeded behaviour). The out-of-core
+    chunked solve scans user chunks through this kernel with the running
+    (hist, top) carried between calls; because the accumulators are
+    *seeded* rather than summed afterwards, the f32 addition chain over
+    tiles is the same one the single unchunked call performs — chunked
+    and unchunked results are bit-identical whenever the tile
+    decomposition of the user axis is the same (chunk_size a multiple of
+    tile_n; see core/solver.py). The seed inputs are aliased to the
+    outputs so the carried accumulator is updated in place on TPU.
 
     Ragged n is handled by padding the user axis with (p=0, b=0) rows:
     those are invalid candidates (v1=-1, v2=0), contributing zero mass
@@ -72,6 +85,10 @@ def scd_fused_hist(p, b, lam, edges, q, tile_n=512, interpret=None):
     b = pad_rows(b, pad)
     grid = ((n + pad) // tile_n,)
     lam2 = lam.reshape(1, k).astype(p.dtype)
+    if hist_init is None:
+        hist_init = jnp.zeros((k, e + 1), jnp.float32)
+    if top_init is None:
+        top_init = jnp.full((k,), -jnp.inf, p.dtype)
     hist, top = pl.pallas_call(
         functools.partial(_kernel, q=q),
         grid=grid,
@@ -80,6 +97,8 @@ def scd_fused_hist(p, b, lam, edges, q, tile_n=512, interpret=None):
             pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
             pl.BlockSpec((1, k), lambda i: (0, 0)),
             pl.BlockSpec((k, e), lambda i: (0, 0)),
+            pl.BlockSpec((k, e + 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((k, e + 1), lambda i: (0, 0)),
@@ -89,6 +108,8 @@ def scd_fused_hist(p, b, lam, edges, q, tile_n=512, interpret=None):
             jax.ShapeDtypeStruct((k, e + 1), jnp.float32),
             jax.ShapeDtypeStruct((1, k), p.dtype),
         ],
+        input_output_aliases={4: 0, 5: 1},
         interpret=interpret,
-    )(p, b, lam2, edges.astype(p.dtype))
+    )(p, b, lam2, edges.astype(p.dtype),
+      hist_init.astype(jnp.float32), top_init.reshape(1, k).astype(p.dtype))
     return hist, top[0]

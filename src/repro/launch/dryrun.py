@@ -313,10 +313,18 @@ def _probe_block(cfg, cell, mesh, multi_pod):
 
 def lower_paper_kp(workload: str, multi_pod: bool = True,
                    reduce: str = "bucketed", algo: str = "scd",
-                   max_iters: int = 2):
+                   max_iters: int = 2, chunk_size: int = None,
+                   streaming: bool = False):
     """One jitted solve of the paper-scale sparse GKP sharded over every
     device of the production mesh. ``reduce``/``algo`` select the §Perf
-    A/B variants (exact gather vs §5.2 bucketed psum; DD vs SCD)."""
+    A/B variants (exact gather vs §5.2 bucketed psum; DD vs SCD).
+
+    ``chunk_size`` chunks the per-iteration map (core/solver.py);
+    ``streaming`` lowers the out-of-core driver (core/chunked.py) whose
+    chunks are synthesized inside the program — its memory_analysis shows
+    argument + temp bytes independent of N, the headline of the chunked
+    solve path (compare against the resident lowering, whose argument
+    bytes are 8·N·K)."""
     from repro.core import SolverConfig, SparseKP
     from repro.core.solver import _solve_entry
     import functools
@@ -327,30 +335,48 @@ def lower_paper_kp(workload: str, multi_pod: bool = True,
     # round to a mesh multiple (shard_map needs exact divisibility)
     n = (wl.n_users // mesh.size) * mesh.size
     k = wl.k
-    kp = SparseKP(
-        p=jax.ShapeDtypeStruct((n, k), jnp.float32),
-        b=jax.ShapeDtypeStruct((n, k), jnp.float32),
-        budgets=jax.ShapeDtypeStruct((k,), jnp.float32),
-    )
     cfg = SolverConfig(algo=algo, reduce=reduce, max_iters=max_iters,
-                       postprocess=True)
+                       postprocess=True, chunk_size=chunk_size)
     t0 = time.time()
-    user = P(axes)
-    # out_specs: lam/iters/r/primal/dual replicated; x user-sharded
-    from repro.core.solver import SolveResult
-    fn = shard_map(
-        functools.partial(_solve_entry, q=wl.q, cfg=cfg, axis=axes),
-        mesh=mesh,
-        in_specs=(SparseKP(p=user, b=user, budgets=P()), P()),
-        out_specs=SolveResult(lam=P(), x=P(axes, None), iters=P(), r=P(),
-                              primal=P(), dual=P(), history=None),
-        check_vma=False,
-    )
-    lowered = jax.jit(fn).lower(kp, jax.ShapeDtypeStruct((k,), jnp.float32))
+    if streaming:
+        if reduce != "bucketed":
+            raise ValueError("--streaming lowers the bucketed-reduce "
+                             "driver only (solve_streaming cannot stream "
+                             "the exact reduce)")
+        from repro.core.chunked import stream_solve_fn
+        from repro.data.synth import sparse_chunk_source
+        chunk = chunk_size = chunk_size or 65536
+        src = sparse_chunk_source(0, n, k, chunk, q=wl.q,
+                                  tightness=wl.tightness)
+        cfg = cfg.replace(chunk_size=None)
+        # The exact program users run: the shared streaming entry builder.
+        fn = stream_solve_fn(src, cfg, wl.q, mesh=mesh)
+        lowered = fn.lower(
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32))
+    else:
+        kp = SparseKP(
+            p=jax.ShapeDtypeStruct((n, k), jnp.float32),
+            b=jax.ShapeDtypeStruct((n, k), jnp.float32),
+            budgets=jax.ShapeDtypeStruct((k,), jnp.float32),
+        )
+        user = P(axes)
+        # out_specs: lam/iters/r/primal/dual replicated; x user-sharded
+        from repro.core.solver import SolveResult
+        fn = shard_map(
+            functools.partial(_solve_entry, q=wl.q, cfg=cfg, axis=axes),
+            mesh=mesh,
+            in_specs=(SparseKP(p=user, b=user, budgets=P()), P()),
+            out_specs=SolveResult(lam=P(), x=P(axes, None), iters=P(), r=P(),
+                                  primal=P(), dual=P(), history=None),
+            check_vma=False,
+        )
+        lowered = jax.jit(fn).lower(kp, jax.ShapeDtypeStruct((k,), jnp.float32))
     compiled = lowered.compile()
     res = {
         "workload": workload, "n_users": n, "k": k,
         "algo": algo, "reduce": reduce, "iters": max_iters,
+        "chunk_size": chunk_size, "streaming": streaming,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "status": "ok",
         "compile_s": round(time.time() - t0, 1),
@@ -375,6 +401,12 @@ def main():
     ap.add_argument("--paper-kp", choices=list(WORKLOADS))
     ap.add_argument("--reduce", choices=["bucketed", "exact"], default="bucketed")
     ap.add_argument("--algo", choices=["scd", "dd"], default="scd")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="paper-kp: chunk the per-iteration map "
+                         "(core/solver.py chunked mode)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="paper-kp: lower the out-of-core driver "
+                         "(core/chunked.py) — argument/temp bytes flat in N")
     ap.add_argument("--no-probe", action="store_true")
     ap.add_argument("--unrolled", action="store_true",
                     help="disable scan-over-layers (exact HLO flops)")
@@ -388,7 +420,9 @@ def main():
     results = []
     if args.paper_kp:
         r = lower_paper_kp(args.paper_kp, multi_pod=True,
-                           reduce=args.reduce, algo=args.algo)
+                           reduce=args.reduce, algo=args.algo,
+                           chunk_size=args.chunk_size,
+                           streaming=args.streaming)
         print(json.dumps(r, indent=2))
         results.append(r)
     elif args.all:

@@ -2,12 +2,21 @@
 
     python -m repro.launch.solve --workload table1 --scale 1e-4
     python -m repro.launch.solve --n 1000000 --k 10 --q 1
+    python -m repro.launch.solve --n 4000000 --k 10 --streaming --chunk-size 65536
 
 Runs the distributed SCD solver over however many devices exist (all mesh
 axes carry the user shard), reports iterations / primal / duality gap /
 violations — i.e., the paper's Table 1 row for the requested size. The
 full-size workloads only fit a cluster; ``--scale`` shrinks N while
 keeping the structure (budgets scale with N, §6).
+
+``--chunk-size C`` streams the per-iteration map over C-user chunks
+(identical results on the SCD bucketed path — see core/solver.py for the
+chunked-vs-unchunked contract). ``--streaming`` additionally stops
+materialising the instance at all: chunks are synthesized on demand
+inside the solve (core/chunked.py), so N is bounded by patience, not
+device memory — this is the out-of-core mode the chunked benchmark uses
+to run far past the unchunked ceiling.
 """
 from __future__ import annotations
 
@@ -16,21 +25,34 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.paper_kp import WORKLOADS, KPWorkload
 from repro.core import SolverConfig, solve, solve_sharded
+from repro.core.chunked import solve_streaming
 from repro.core.instances import shard_key, sparse_instance
+from repro.data.synth import sparse_chunk_source
+
+
+def _mesh():
+    if jax.device_count() > 1:
+        return jax.make_mesh((jax.device_count(),), ("users",))
+    return None
 
 
 def run(workload: KPWorkload, cfg: SolverConfig, seed=0, mesh=None):
+    """Solve one §6 sparse workload; returns the Table-1-style row dict.
+
+    The instance is materialised on device and solved with
+    ``solve``/``solve_sharded`` (``cfg.chunk_size`` chunks the iteration
+    map if set). ``mesh=None`` auto-shards over all visible devices.
+    """
     kp, q = sparse_instance(
         shard_key(seed), workload.n_users, workload.k, workload.q,
         tightness=workload.tightness,
     )
     t0 = time.time()
-    if mesh is None and jax.device_count() > 1:
-        mesh = jax.make_mesh((jax.device_count(),), ("users",))
+    if mesh is None:
+        mesh = _mesh()
     if mesh is not None:
         res = solve_sharded(kp, mesh, cfg, q=q)
     else:
@@ -49,7 +71,37 @@ def run(workload: KPWorkload, cfg: SolverConfig, seed=0, mesh=None):
     }
 
 
+def run_streaming(workload: KPWorkload, cfg: SolverConfig, chunk: int,
+                  seed=0, mesh=None):
+    """Out-of-core solve of a §6 workload: chunks generated on demand.
+
+    Nothing O(N) is ever materialised (device state is O(chunk·K + K·E));
+    the decision matrix is not returned — stream it per chunk with
+    ``core.chunked.decisions_chunk`` using the reported (lam, tau).
+    """
+    src = sparse_chunk_source(seed, workload.n_users, workload.k, chunk,
+                              q=workload.q, tightness=workload.tightness)
+    t0 = time.time()
+    if mesh is None:
+        mesh = _mesh()
+    res = solve_streaming(src, cfg, q=workload.q, mesh=mesh)
+    dt = time.time() - t0
+    viol = float(jnp.max((res.r - src.budgets) / src.budgets))
+    return {
+        "n_users": workload.n_users,
+        "k": workload.k,
+        "chunk_size": chunk,
+        "iterations": int(res.iters),
+        "primal": float(res.primal),
+        "dual": float(res.dual),
+        "duality_gap": float(res.dual - res.primal),
+        "max_violation": viol,
+        "wall_s": round(dt, 2),
+    }
+
+
 def main():
+    """CLI entry point; prints one ``key: value`` line per metric."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=list(WORKLOADS), default="table1")
     ap.add_argument("--scale", type=float, default=1e-4,
@@ -64,6 +116,14 @@ def main():
     ap.add_argument("--use-kernels", action="store_true",
                     help="Pallas kernel path (fused map+reduce for the "
                          "sparse bucketed solve; interpret mode off-TPU)")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="stream the per-iteration map over user chunks "
+                         "of this size (bit-identical on the SCD bucketed "
+                         "path; see core/solver.py)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="out-of-core mode: synthesize chunks on demand, "
+                         "never materialise the (N, K) instance "
+                         "(requires --chunk-size)")
     args = ap.parse_args()
 
     wl = WORKLOADS[args.workload]
@@ -72,8 +132,14 @@ def main():
     cfg = SolverConfig(algo=args.algo, reduce=args.reduce,
                        max_iters=args.max_iters,
                        presolve_samples=args.presolve,
-                       use_kernels=args.use_kernels)
-    out = run(wl, cfg)
+                       use_kernels=args.use_kernels,
+                       chunk_size=None if args.streaming else args.chunk_size)
+    if args.streaming:
+        if not args.chunk_size:
+            raise SystemExit("--streaming requires --chunk-size")
+        out = run_streaming(wl, cfg, args.chunk_size)
+    else:
+        out = run(wl, cfg)
     for k, v in out.items():
         print(f"{k}: {v}")
 

@@ -1,0 +1,184 @@
+"""Chunked / out-of-core solve == unchunked oracle, bit for bit.
+
+The contract under test (core/solver.py module docstring): with the SCD
+bucketed reduce, chunking the per-iteration map — any chunk size,
+including 1, ragged final chunks and chunk >= n — produces a SolveResult
+bit-identical to the unchunked solve, because the histogram accumulation
+is carry-seeded (same f32 additions in the same order). The kernel path
+additionally requires the same tile decomposition on both sides
+(cfg.kernel_tile pins it). The streaming driver (core/chunked.py) must
+match the same oracle on lam/iters and reconstruct the identical primal
+via decisions_chunk. DD chunked is reduce-order-level, not bitwise.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SolverConfig, solve
+from repro.core.bucketing import bucket_histogram, make_edges
+from repro.core.chunked import array_source, decisions_chunk, solve_streaming
+from repro.core.instances import shard_key, sparse_instance, dense_instance
+from repro.core.sparse_scd import candidates_sparse
+from repro.data.synth import sparse_chunk_source
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _assert_same_result(a, b):
+    np.testing.assert_array_equal(np.asarray(a.lam), np.asarray(b.lam))
+    assert int(a.iters) == int(b.iters)
+    np.testing.assert_array_equal(np.asarray(a.x), np.asarray(b.x))
+    np.testing.assert_array_equal(np.asarray(a.r), np.asarray(b.r))
+    assert float(a.primal) == float(b.primal)
+    assert float(a.dual) == float(b.dual)
+
+
+# ---------------------------------------------------------------------------
+# bucket_histogram: the carry-seeded scatter is the bitwise foundation.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 7, 64, 500, 1021, 4096])
+def test_seeded_histogram_chunking_invariant(chunk):
+    """Chunked scatter-add onto the carry == one scatter over all rows."""
+    kp, q = sparse_instance(shard_key(3), n=1021, k=8, q=2, tightness=0.4)
+    lam = jnp.full((8,), 0.7)
+    edges = make_edges(lam, 1e-4, 1.6, 24)
+    v1, v2 = candidates_sparse(kp.p, kp.b, lam, q)
+    whole = bucket_histogram(v1, v2, edges)
+    acc = jnp.zeros_like(whole)
+    for i in range(0, 1021, chunk):
+        acc = bucket_histogram(v1[i:i + chunk], v2[i:i + chunk], edges,
+                               init=acc)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(whole))
+
+
+# ---------------------------------------------------------------------------
+# cfg.chunk_size: in-memory chunked solve vs the unchunked oracle.
+# ---------------------------------------------------------------------------
+
+# 1021 is prime: every chunk size below exercises a ragged final chunk.
+@pytest.mark.parametrize("chunk", [1, 7, 256, 1021, 4096])
+def test_chunked_solve_bit_identical_sparse(chunk):
+    """chunk = 1, ragged tails, chunk == n and chunk >= n, all bitwise."""
+    kp, q = sparse_instance(shard_key(4), n=1021, k=10, q=2, tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=20)
+    _assert_same_result(solve(kp, cfg.replace(chunk_size=chunk), q=q),
+                        solve(kp, cfg, q=q))
+
+
+def test_chunked_solve_bit_identical_kernels():
+    """Kernel path: same tile on both sides -> bitwise, incl. ragged."""
+    kp, q = sparse_instance(shard_key(7), n=509, k=8, q=1, tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=10, use_kernels=True,
+                       kernel_tile=128)
+    for chunk in [128, 256, 1024]:   # multiples of the pinned tile
+        _assert_same_result(solve(kp, cfg.replace(chunk_size=chunk), q=q),
+                            solve(kp, cfg, q=q))
+
+
+def test_chunked_solve_bit_identical_kernels_chunk1():
+    """chunk = 1 on the kernel path: tile 1 on both sides."""
+    kp, q = sparse_instance(shard_key(5), n=48, k=6, q=1, tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=6, use_kernels=True,
+                       kernel_tile=1)
+    _assert_same_result(solve(kp, cfg.replace(chunk_size=1), q=q),
+                        solve(kp, cfg, q=q))
+
+
+def test_chunked_solve_bit_identical_dense():
+    """Dense (Alg 3 map) chunking is bitwise too."""
+    kp = dense_instance(shard_key(6), n=130, m=6, k=4, local="C223",
+                        tightness=0.25)
+    cfg = SolverConfig(reduce="bucketed", max_iters=10)
+    _assert_same_result(solve(kp, cfg.replace(chunk_size=32), q=0),
+                        solve(kp, cfg, q=0))
+
+
+def test_chunked_dd_matches_to_reduce_order():
+    """DD's consumption sum groups by chunk: allclose, documented non-bitwise."""
+    kp, q = sparse_instance(shard_key(4), n=1021, k=10, q=2, tightness=0.4)
+    cfg = SolverConfig(algo="dd", max_iters=10, dd_lr=2e-3)
+    a = solve(kp, cfg, q=q)
+    b = solve(kp, cfg.replace(chunk_size=100), q=q)
+    np.testing.assert_allclose(np.asarray(a.lam), np.asarray(b.lam),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(a.primal), float(b.primal), rtol=1e-5)
+
+
+def test_chunked_exact_reduce_rejected():
+    """The exact reduce must see every candidate: chunking raises."""
+    kp, q = sparse_instance(shard_key(4), n=64, k=4, q=1, tightness=0.4)
+    with pytest.raises(ValueError, match="bucketed"):
+        solve(kp, SolverConfig(reduce="exact", chunk_size=16), q=q)
+
+
+# ---------------------------------------------------------------------------
+# Streaming driver: nothing O(n) on device.
+# ---------------------------------------------------------------------------
+
+def test_streaming_matches_resident_bitwise():
+    """array_source streaming == resident solve on lam/iters, any chunking."""
+    kp, q = sparse_instance(shard_key(4), n=1021, k=10, q=2, tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=20)
+    base = solve(kp, cfg, q=q)
+    for chunk in [100, 256, 2048]:   # ragged tail / mid / single chunk
+        sr = solve_streaming(array_source(kp, chunk), cfg, q=q)
+        np.testing.assert_array_equal(np.asarray(sr.lam), np.asarray(base.lam))
+        assert int(sr.iters) == int(base.iters)
+        np.testing.assert_allclose(float(sr.dual), float(base.dual),
+                                   rtol=1e-6)
+        # §5.4 differs by design: bucketed (conservative) vs exact sort.
+        assert np.all(np.asarray(sr.r) <= np.asarray(kp.budgets) * (1 + 1e-4))
+        np.testing.assert_allclose(float(sr.primal), float(base.primal),
+                                   rtol=2e-2)
+
+
+def test_streaming_kernels_matches_resident_chunked():
+    """Fused-kernel streaming == resident chunked kernels, pinned tile."""
+    kp, q = sparse_instance(shard_key(4), n=1021, k=10, q=2, tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=10, use_kernels=True,
+                       kernel_tile=128)
+    res = solve(kp, cfg.replace(chunk_size=256), q=q)
+    sr = solve_streaming(array_source(kp, 256), cfg, q=q)
+    np.testing.assert_array_equal(np.asarray(sr.lam), np.asarray(res.lam))
+    assert int(sr.iters) == int(res.iters)
+
+
+def test_streaming_decisions_reconstruct_primal():
+    """decisions_chunk streams out exactly the solution the solve scored."""
+    kp, q = sparse_instance(shard_key(4), n=1021, k=10, q=2, tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=20)
+    src = array_source(kp, 256)
+    sr = solve_streaming(src, cfg, q=q)
+    primal, r = 0.0, jnp.zeros((10,))
+    for i in range(math.ceil(1021 / 256)):
+        x, valid = decisions_chunk(src, sr.lam, q, i, tau=sr.tau)
+        p_c, b_c = src.fn(jnp.int32(i))
+        primal += float(jnp.sum(jnp.where(x, p_c, 0.0)))
+        r = r + jnp.sum(b_c * x.astype(b_c.dtype), axis=0)
+    np.testing.assert_allclose(primal, float(sr.primal), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(sr.r), rtol=1e-5)
+
+
+def test_streaming_synth_source_never_materialises():
+    """Generated source solves at quality on n far beyond the chunk size."""
+    src = sparse_chunk_source(0, n=100_000, k=8, chunk=4096, q=1,
+                              tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=15)
+    res = solve_streaming(src, cfg, q=1)
+    assert int(res.iters) < 15
+    assert np.all(np.asarray(res.r) <= np.asarray(src.budgets) * (1 + 1e-4))
+    gap = float((res.dual - res.primal) / res.primal)
+    assert 0 <= gap < 0.01
+
+
+def test_streaming_rejects_exact_and_history():
+    kp, q = sparse_instance(shard_key(4), n=64, k=4, q=1, tightness=0.4)
+    src = array_source(kp, 16)
+    with pytest.raises(ValueError, match="bucketed"):
+        solve_streaming(src, SolverConfig(reduce="exact"), q=q)
+    with pytest.raises(ValueError, match="record_history"):
+        solve_streaming(src, SolverConfig(record_history=True), q=q)
