@@ -15,12 +15,20 @@ demonstrates that for the streaming driver (core/chunked.py):
   flat in n (the scan carries O(chunk·K + K·E) state and a loop
   counter), while the resident ``solve`` program's bytes grow as
   8·n·K + intermediates — its device-memory ceiling is exactly what the
-  streaming path removes.
+  streaming path removes;
+* **pass accounting** (DESIGN.md §5c, ``BENCH_stream_passes.json``):
+  measured source passes and per-pass wall time for the fused
+  (``iters + 1``) vs legacy (``iters + 3``) finalize, and for the
+  host-fed pipeline (core/prefetch.py) with double-buffered vs
+  synchronous ``device_put`` — the combined fused+double-buffered
+  speedup over legacy+synchronous is the headline number
+  ``tools/bench_diff.py`` gates against.
 
 The CI smoke gate fails if the streaming program's footprint is not flat
-(<= 1% drift across n) or if the big-n solve regresses infeasible.
-Writes ``BENCH_chunked.json`` next to ``BENCH_scd.json`` so later PRs
-can diff the trajectory.
+(<= 1% drift across n), if the big-n solve regresses infeasible, or if
+a measured pass count deviates from the §5c accounting. Writes
+``BENCH_chunked.json`` next to ``BENCH_scd.json`` so later PRs can diff
+the trajectory.
 """
 from __future__ import annotations
 
@@ -33,19 +41,29 @@ import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
+import numpy as np  # noqa: E402
+
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core import SolverConfig, SparseKP  # noqa: E402
 from repro.core.chunked import stream_solve_fn  # noqa: E402
+from repro.core.prefetch import solve_streaming_host  # noqa: E402
 from repro.core.solver import _solve_entry  # noqa: E402
-from repro.data.synth import sparse_chunk_source  # noqa: E402
+from repro.data.synth import (  # noqa: E402
+    sparse_chunk_source,
+    sparse_host_chunk_source,
+)
 
 K, Q, CHUNK = 8, 1, 8192
 # Largest unchunked point in BENCH_scd.json is n=32768; the acceptance
 # bar is a solve at >= 8x that with flat peak device memory.
 GRID = [32768, 65536, 131072, 262144, 524288]
 SMOKE_GRID = [32768, 65536]
+# Pass-accounting grid: the smoke size (shared with CI so bench_diff can
+# match points) plus the largest solve.
+PASSES_GRID = [65536, 524288]
+PASSES_SMOKE_GRID = [65536]
 
 
 def _cfg(use_kernels=True, max_iters=12):
@@ -104,12 +122,150 @@ def bench_point(n, seed=0, use_kernels=True, max_iters=12):
     }
 
 
+def _count_device_passes(src):
+    """Wrap a traced ChunkSource with a runtime fetch counter."""
+    from jax.experimental import io_callback
+
+    calls = {"n": 0}
+    inner = src.fn
+
+    def _bump(_):
+        calls["n"] += 1
+        return np.int32(0)
+
+    def fn(i):
+        io_callback(_bump, jax.ShapeDtypeStruct((), np.int32), i,
+                    ordered=False)
+        return inner(i)
+
+    return src._replace(fn=fn), calls
+
+
+# Timed solves repeat this many times and keep the fastest wall: the
+# container's CPU shares are throttled in bursts, and min-of-N is the
+# standard way to read a stable number through that.
+REPEATS = 3
+
+
+def _timed_device_solve(n, cfg, seed=0):
+    """Streamed device solve with measured wall time and source passes."""
+    src = sparse_chunk_source(seed, n, K, CHUNK, q=Q, tightness=0.4)
+    src, calls = _count_device_passes(src)
+    fn = stream_solve_fn(src, cfg, Q)
+    lam0 = jnp.ones((K,), jnp.float32)
+    # AOT-compile and time the executable itself: compile time excluded.
+    compiled = fn.lower(src.budgets, lam0).compile()
+    wall = float("inf")
+    for _ in range(REPEATS):
+        # Drain in-flight (unordered) io_callbacks before resetting, or a
+        # straggler from the previous repeat lands after the reset.
+        jax.effects_barrier()
+        calls["n"] = 0
+        t0 = time.perf_counter()
+        res = jax.block_until_ready(compiled(src.budgets, lam0))
+        wall = min(wall, time.perf_counter() - t0)
+    jax.effects_barrier()
+    n_chunks = -(-n // CHUNK)
+    assert calls["n"] % n_chunks == 0, (calls["n"], n_chunks)
+    return res, wall, calls["n"] // n_chunks
+
+
+def _timed_host_solve(n, cfg, double_buffer, seed=0):
+    """Host-fed streamed solve (numpy chunk producer) with pass counts."""
+    src = sparse_host_chunk_source(seed, n, K, CHUNK, q=Q, tightness=0.4)
+    calls = {"n": 0}
+    inner = src.fn
+
+    def fn(i):
+        calls["n"] += 1
+        return inner(i)
+
+    src = src._replace(fn=fn)
+    # Warm the jit caches with one tiny solve on the same shapes.
+    warm = src._replace(n=CHUNK)
+    solve_streaming_host(warm, cfg, q=Q, double_buffer=double_buffer)
+    wall = float("inf")
+    for _ in range(REPEATS):
+        calls["n"] = 0
+        t0 = time.perf_counter()
+        res = solve_streaming_host(src, cfg, q=Q,
+                                   double_buffer=double_buffer)
+        jax.block_until_ready(res)
+        wall = min(wall, time.perf_counter() - t0)
+    n_chunks = -(-n // CHUNK)
+    assert calls["n"] % n_chunks == 0, (calls["n"], n_chunks)
+    return res, wall, calls["n"] // n_chunks
+
+
+def _entry(wall, passes, res, budgets):
+    return {"wall_s": round(wall, 4), "passes": passes,
+            "wall_per_pass_s": round(wall / passes, 4),
+            "iterations": int(res.iters),
+            "feasible": bool(jnp.all(res.r <= jnp.asarray(budgets)
+                                     * (1 + 1e-4))),
+            "primal": float(res.primal)}
+
+
+def bench_passes_point(n, use_kernels=True, max_iters=12):
+    """Pass accounting at one n: fused vs legacy, double-buffered vs sync.
+
+    Five solves of the same workload: traced device source with the
+    fused and legacy finalize (pass-count delta), and the host-fed
+    pipeline double-buffered+fused / synchronous+fused /
+    synchronous+legacy. ``combined_speedup`` (sync+legacy over
+    double-buffered+fused) is the end-to-end win of the fused finalize
+    and the prefetch pipeline together; the pass counts are asserted
+    against the §5c accounting.
+
+    Runs the kernel (production) path like the memory section: the
+    fused finalize is a VMEM-resident accumulation there
+    (scd_finalize_hist), whereas on the pure-jnp path the two
+    carry-seeded scatter histograms of the single fused pass cost about
+    what the three legacy passes do on CPU — the pass-count win is
+    path-independent (test-asserted on both), the wall-clock win rides
+    on the kernel. Numbers on this CPU backend run the kernels under
+    the interpreter; on TPU the gap widens (HBM traffic per §5).
+    """
+    fused = _cfg(use_kernels, max_iters)
+    legacy = fused.replace(stream_finalize="legacy")
+    out = {"n": n, "n_chunks": -(-n // CHUNK)}
+    budgets = sparse_chunk_source(0, n, K, CHUNK, q=Q, tightness=0.4).budgets
+
+    res_f, wall_f, passes_f = _timed_device_solve(n, fused)
+    res_l, wall_l, passes_l = _timed_device_solve(n, legacy)
+    assert int(res_f.iters) == int(res_l.iters)
+    out["device"] = {
+        "fused": _entry(wall_f, passes_f, res_f, budgets),
+        "legacy": _entry(wall_l, passes_l, res_l, budgets),
+        "finalize_speedup": round(wall_l / wall_f, 3),
+        "passes_ok": (passes_f == int(res_f.iters) + 1
+                      and passes_l == int(res_l.iters) + 3),
+    }
+
+    res_db, wall_db, passes_db = _timed_host_solve(n, fused, True)
+    res_sf, wall_sf, passes_sf = _timed_host_solve(n, fused, False)
+    res_sl, wall_sl, passes_sl = _timed_host_solve(n, legacy, False)
+    out["host"] = {
+        "double_buffered_fused": _entry(wall_db, passes_db, res_db, budgets),
+        "synchronous_fused": _entry(wall_sf, passes_sf, res_sf, budgets),
+        "synchronous_legacy": _entry(wall_sl, passes_sl, res_sl, budgets),
+        "pipeline_speedup": round(wall_sf / wall_db, 3),
+        "combined_speedup": round(wall_sl / wall_db, 3),
+        "passes_ok": (passes_db == int(res_db.iters) + 1
+                      and passes_sf == int(res_sf.iters) + 1
+                      and passes_sl == int(res_sl.iters) + 3),
+    }
+    return out
+
+
 def main() -> None:
-    """Run the grid, write the JSON report, gate on flat memory."""
+    """Run the grids, write the JSON reports, gate on the contracts."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="two small points (CI-friendly)")
     ap.add_argument("--out", default="BENCH_chunked.json")
+    ap.add_argument("--passes-out", default="BENCH_stream_passes.json",
+                    help="pass-accounting report (empty string to skip)")
     ap.add_argument("--no-kernels", action="store_true",
                     help="jnp map instead of the fused Pallas kernel")
     args = ap.parse_args()
@@ -137,9 +293,33 @@ def main() -> None:
     out_path.write_text(json.dumps(report, indent=2) + "\n")
     print(f"wrote {args.out}")
 
+    passes_ok = True
+    if args.passes_out:
+        ppoints = []
+        print("n,fused_passes,legacy_passes,finalize_x,pipeline_x,combined_x")
+        for n in (PASSES_SMOKE_GRID if args.smoke else PASSES_GRID):
+            p = bench_passes_point(n, use_kernels=not args.no_kernels)
+            ppoints.append(p)
+            print(f"{n},{p['device']['fused']['passes']},"
+                  f"{p['device']['legacy']['passes']},"
+                  f"{p['device']['finalize_speedup']},"
+                  f"{p['host']['pipeline_speedup']},"
+                  f"{p['host']['combined_speedup']}")
+        passes_ok = all(p["device"]["passes_ok"] and p["host"]["passes_ok"]
+                        for p in ppoints)
+        preport = {
+            "backend": jax.default_backend(),
+            "k": K, "q": Q, "chunk": CHUNK,
+            "points": ppoints,
+        }
+        pathlib.Path(args.passes_out).write_text(
+            json.dumps(preport, indent=2) + "\n")
+        print(f"wrote {args.passes_out}")
+
     bad = [p for p in points if not p["feasible"]]
-    if bad or not flat:
-        print(f"REGRESSION: feasible={not bad}, memory_flat_in_n={flat}")
+    if bad or not flat or not passes_ok:
+        print(f"REGRESSION: feasible={not bad}, memory_flat_in_n={flat}, "
+              f"pass_counts_ok={passes_ok}")
         sys.exit(1)
 
 

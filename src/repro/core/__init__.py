@@ -4,6 +4,7 @@ Public API:
     types.SparseKP / types.DenseKP / types.SolverConfig — instances + config
     solver.solve / solver.solve_sharded                 — DD (Alg 2) & SCD (Alg 4)
     chunked.solve_streaming / chunked.ChunkSource       — out-of-core solves
+    prefetch.solve_streaming_host / HostChunkSource     — host-fed (disk) solves
     greedy.greedy_solve                                 — Alg 1 (laminar IP, optimal)
     sparse_scd.candidates_sparse                        — Alg 5 (linear-time map)
     bucketing.*                                         — §5.2 bucketed reduce
@@ -35,6 +36,12 @@ from .chunked import (  # noqa: F401
     array_source,
     decisions_chunk,
     solve_streaming,
+)
+from .prefetch import (  # noqa: F401
+    HostChunkSource,
+    host_array_source,
+    memmap_source,
+    solve_streaming_host,
 )
 from .instances import dense_instance, shard_key, sparse_instance  # noqa: F401
 from .moe_router import RouterOut, scd_route, topk_route  # noqa: F401

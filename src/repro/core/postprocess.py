@@ -25,8 +25,19 @@ chunk by chunk via carry-seeded scatter-add (bit-identical to the one-shot
 histogram — scatter updates apply in row order), then one constant-size
 threshold recovery. ``feasibility_threshold_bucketed`` composes the same
 three pieces for resident shards.
+
+Single-pass streaming (DESIGN.md §5c): the fused finalize pass cannot
+build edges from the global (lo, hi) — those are only known once the same
+pass completes — so it bins group profits against the *fixed* geometric
+ladder :func:`profit_edges_fixed` instead, and accumulates a removable
+*profit* histogram next to the consumption one. With both histograms,
+:func:`threshold_and_removed` recovers tau AND the exact post-projection
+(r, primal) as prefix subtractions, which is what deletes the dedicated
+projection-apply pass entirely.
 """
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +47,10 @@ __all__ = [
     "feasibility_threshold_exact",
     "feasibility_threshold_bucketed",
     "profit_edges",
+    "profit_edges_fixed",
     "removable_hist",
     "threshold_from_removable_hist",
+    "threshold_and_removed",
 ]
 
 
@@ -73,6 +86,28 @@ def profit_edges(lo, hi, n_edges=512):
     a running min/max across chunks — both are exact, so the streaming
     and resident paths build bit-identical edges). Returns (E,)."""
     return jnp.linspace(lo, hi, n_edges)
+
+
+def profit_edges_fixed(n_edges=512, lo=1e-6, hi=1e6, dtype=jnp.float32):
+    """Fixed geometric group-profit ladder — no data-dependent endpoints.
+
+    The single-pass streaming finalize (DESIGN.md §5c) bins group profits
+    in the *same* source pass that discovers their range, so its edges
+    cannot come from the global (lo, hi). Sparse group profits are sums
+    of selected positive adjusted profits, hence >= 0, and a geometric
+    ladder gives constant *relative* granularity: tau lands within one
+    growth factor (~(hi/lo)^(1/(E-1)), ≈5.6% at the defaults) of the
+    minimal removal — finer than the linear (lo, hi)/E ladder in the
+    low-profit region where removal happens, coarser near hi where it
+    doesn't. Profits below ``lo`` share bucket 0 (their consumption is ~0
+    by construction); profits above ``hi`` land in the overflow bucket,
+    which :func:`threshold_and_removed` can still remove via its
+    tau = +inf fallback, so conservative-exactness survives any range.
+    Built in f64 numpy then cast, so every caller gets the bit-identical
+    ladder. Returns (E,) ascending.
+    """
+    return jnp.asarray(np.logspace(np.log10(lo), np.log10(hi), n_edges),
+                       dtype=dtype)
 
 
 def removable_hist(ptilde, cons, edges, init=None):
@@ -111,6 +146,42 @@ def threshold_from_removable_hist(hist, edges, r_total, budgets):
     need = jnp.any(excess > 0)
     e_star = jnp.argmax(feas_e)                            # minimal feasible edge
     return jnp.where(need, edges[e_star], -jnp.inf)
+
+
+def threshold_and_removed(cons_hist, gain_hist, edges, r_total, budgets):
+    """tau plus the exact removed (consumption, profit) prefix masses.
+
+    cons_hist: (K, E+1) removable-consumption histogram, gain_hist:
+    (E+1,) removable raw-profit histogram, both fully accumulated /
+    psum'd over the same group-profit ``edges`` (E,). Removing every
+    group with p~ <= edges[e] removes exactly the prefix sums of both
+    histograms, so the caller can report post-projection totals as
+    ``r - removed_cons`` / ``primal - removed_gain`` without ever
+    touching the items again — this is what lets the streaming finalize
+    drop the dedicated projection-apply pass (DESIGN.md §5c).
+
+    Returns (tau, removed_cons (K,), removed_gain ()). tau is -inf when
+    already feasible (nothing removed) and +inf when no edge prefix
+    covers the excess (mass above the ladder: every group is removed —
+    always feasible, since zero consumption fits any budget).
+    """
+    n_edges = edges.shape[0]
+    excess = jnp.maximum(r_total - budgets, 0.0)
+    ccum = jnp.cumsum(cons_hist, axis=-1)                  # (K, E+1)
+    gcum = jnp.cumsum(gain_hist, axis=-1)                  # (E+1,)
+    feas_e = jnp.all(ccum[:, :n_edges] >= excess[:, None], axis=0)  # (E,)
+    need = jnp.any(excess > 0)
+    covered = jnp.any(feas_e)
+    e_star = jnp.argmax(feas_e)                            # minimal feasible edge
+    inf = jnp.asarray(jnp.inf, edges.dtype)
+    tau = jnp.where(covered, edges[e_star], inf)
+    tau = jnp.where(need, tau, -inf)
+    # Prefix through e_star, or through the overflow bucket on fallback.
+    j = jnp.where(covered, e_star, n_edges)
+    removed_c = jnp.where(need, jnp.take_along_axis(
+        ccum, jnp.full((ccum.shape[0], 1), j), axis=-1)[:, 0], 0.0)
+    removed_g = jnp.where(need, gcum[j], 0.0)
+    return tau, removed_c, removed_g
 
 
 def feasibility_threshold_bucketed(ptilde, cons, r_total, budgets, axis=None, n_edges=512):

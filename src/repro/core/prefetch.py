@@ -1,0 +1,389 @@
+"""Host-fed streaming solves: chunks that live on disk, not in a trace.
+
+``core.chunked`` streams instances whose chunks are *traceable* — a
+generated function of the chunk index, or slices of device-resident
+arrays. Real datasets are neither: they sit in files on the host. This
+module adds the third source family the repo was missing — a
+:class:`HostChunkSource` producing NumPy chunks (memory-mapped files,
+in-memory arrays, or any callable) — and a Python-level epoch driver,
+:func:`solve_streaming_host`, that feeds them through the *same*
+accumulation kernels as the traced driver with the next chunk's
+host-to-device transfer overlapped against the current chunk's compute:
+
+* **Double buffering.** Each per-chunk step is dispatched
+  asynchronously; while the device works, the host produces chunk i+1
+  (memmap page-in, decompression, whatever ``fn`` does) and issues its
+  ``jax.device_put``, so H2D rides under the kernel. The synchronous
+  mode (``double_buffer=False``) blocks on every transfer and every
+  step — the naive feeding loop — and exists as the benchmark baseline
+  (BENCH_stream_passes.json measures the gap).
+* **Donated carries.** The running (histogram, top) / finalize
+  accumulators are donated back to each step, so the constant-size
+  carry state is updated in place rather than reallocated per chunk.
+
+Bit-identity: every per-chunk step runs ``solver.scd_chunk_accumulate``
+and ``chunked.finalize_chunk_accumulate`` — the exact functions the
+traced scan bodies run — and the multiplier update replays the
+``iterate_multipliers`` step arithmetic, so a host-fed solve over the
+same rows and chunking is bit-identical to ``solve_streaming`` over an
+``array_source``, fields for fields (tests pin this). The epoch loop is
+single-process/single-device by construction; multi-host deployments
+shard the *file*, not the loop (each host feeds its own shard — the
+psum wiring for that lives with the traced driver).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .bucketing import make_edges, threshold_from_hist
+from .chunked import (
+    StreamResult,
+    _metrics_init,
+    _num_chunks,
+    _pinned_dot,
+    _validate_stream_cfg,
+    adjusted_profit_chunk,
+    finalize_chunk_accumulate,
+)
+from .postprocess import (
+    profit_edges,
+    profit_edges_fixed,
+    removable_hist,
+    threshold_and_removed,
+    threshold_from_removable_hist,
+)
+from .solver import damped_multiplier_step, scd_chunk_accumulate, solve
+from .sparse_scd import select_sparse
+from .types import SolverConfig, SparseKP
+
+__all__ = ["HostChunkSource", "host_array_source", "memmap_source",
+           "callable_source", "solve_streaming_host"]
+
+
+class HostChunkSource(NamedTuple):
+    """A sparse GKP instance delivered as on-demand *NumPy* chunks.
+
+    The host-side mirror of ``chunked.ChunkSource``: ``fn(i)`` is a
+    plain Python callable mapping the int chunk index to ``(p, b)``
+    NumPy arrays of shape exactly (chunk, K) — rows at global index
+    >= n (the ragged tail) MUST come back as p = b = 0, the same
+    inert-row contract as the traced sources. ``fn`` runs on the host
+    thread between device dispatches, so anything goes: memmap slices,
+    file decoding, RPC fetches.
+    """
+
+    n: int                 # virtual user count
+    k: int                 # knapsacks (== items, sparse form)
+    chunk: int             # rows per chunk
+    budgets: np.ndarray    # (K,) global budgets
+    fn: Callable           # i -> (p (chunk, K), b (chunk, K)) numpy
+
+
+def _pad_chunk(a, chunk, dtype):
+    a = np.asarray(a, dtype=dtype)
+    if a.shape[0] < chunk:
+        a = np.concatenate(
+            [a, np.zeros((chunk - a.shape[0],) + a.shape[1:], dtype)])
+    return a
+
+
+def host_array_source(p, b, budgets, chunk: int) -> HostChunkSource:
+    """Wrap host-resident (n, K) arrays — incl. ``np.memmap`` — as chunks.
+
+    Slicing a memmap only touches the pages of the requested chunk, so
+    this is the out-of-core path for instances that exist as files: the
+    (n, K) arrays are never resident in process memory, only the
+    O(chunk·K) working slice (plus page cache at the OS's discretion).
+    The ragged tail is zero-padded per the inert-row contract.
+    """
+    p = np.asarray(p) if not isinstance(p, np.memmap) else p
+    b = np.asarray(b) if not isinstance(b, np.memmap) else b
+    n, k = p.shape
+    dtype = np.float32
+
+    def fn(i):
+        lo = i * chunk
+        hi = min(lo + chunk, n)
+        return (_pad_chunk(p[lo:hi], chunk, dtype),
+                _pad_chunk(b[lo:hi], chunk, dtype))
+
+    return HostChunkSource(n=n, k=k, chunk=chunk,
+                           budgets=np.asarray(budgets, dtype), fn=fn)
+
+
+def memmap_source(p_path, b_path, n: int, k: int, budgets,
+                  chunk: int, dtype=np.float32) -> HostChunkSource:
+    """Memory-mapped on-disk instance: raw row-major (n, K) p/b files.
+
+    Opens both files with ``np.memmap(mode="r")`` and serves them
+    through :func:`host_array_source`; nothing O(n) is ever read into
+    memory — the epoch loop faults in exactly the chunks it streams,
+    overlapped with device compute when double buffering is on.
+    """
+    p = np.memmap(p_path, dtype=dtype, mode="r", shape=(n, k))
+    b = np.memmap(b_path, dtype=dtype, mode="r", shape=(n, k))
+    return host_array_source(p, b, budgets, chunk)
+
+
+def callable_source(fn, n: int, k: int, budgets, chunk: int) -> HostChunkSource:
+    """HostChunkSource from any chunk-producing callable.
+
+    ``fn(i)`` must honour the inert-row contract (rows past n come back
+    zero); the produced arrays are converted/padded defensively.
+    """
+    def wrapped(i):
+        p, b = fn(i)
+        return (_pad_chunk(p, chunk, np.float32),
+                _pad_chunk(b, chunk, np.float32))
+
+    return HostChunkSource(n=n, k=k, chunk=chunk,
+                           budgets=np.asarray(budgets, np.float32),
+                           fn=wrapped)
+
+
+# --------------------------------------------------------------------------
+# The double-buffered epoch driver.
+# --------------------------------------------------------------------------
+
+def _put_chunk(source, i, dtype):
+    p, b = source.fn(i)
+    return (jax.device_put(np.asarray(p, dtype)),
+            jax.device_put(np.asarray(b, dtype)))
+
+
+def _epoch(source, step, state, extra, dtype, double_buffer):
+    """One pass over all chunks: ``state = step(state, p, b, *extra)``.
+
+    Double-buffered mode dispatches the step (async) and only then
+    produces + uploads the next chunk, so host work and H2D overlap the
+    device compute; the carry pytree is donated by ``step`` so the
+    constant-size state is updated in place. Synchronous mode blocks on
+    the transfer and on the step — one chunk fully in flight at a time —
+    and is kept as the benchmark baseline.
+    """
+    c = _num_chunks(source.n, source.chunk)
+    if not double_buffer:
+        for i in range(c):
+            cur = _put_chunk(source, i, dtype)
+            jax.block_until_ready(cur)
+            state = step(state, *cur, *extra)
+            jax.block_until_ready(state)
+        return state
+    nxt = _put_chunk(source, 0, dtype)
+    for i in range(c):
+        cur, nxt = nxt, None
+        state = step(state, *cur, *extra)
+        if i + 1 < c:
+            nxt = _put_chunk(source, i + 1, dtype)
+    return state
+
+
+def _presolve_host(source, lam0, q, cfg):
+    """§5.3 warm start: materialise the leading chunks, solve scaled."""
+    if cfg.presolve_samples <= 0:
+        return lam0
+    s = min(cfg.presolve_samples, source.n)
+    m = -(-s // source.chunk)
+    parts = [source.fn(i) for i in range(m)]
+    p = np.concatenate([pp for pp, _ in parts])[:s]
+    b = np.concatenate([bb for _, bb in parts])[:s]
+    frac = s / source.n
+    small = SparseKP(p=jnp.asarray(p), b=jnp.asarray(b),
+                     budgets=jnp.asarray(source.budgets) * frac)
+    sub_cfg = cfg.replace(presolve_samples=0, record_history=False,
+                          postprocess=False, chunk_size=None)
+    return solve(small, sub_cfg, q=q, lam0=lam0).lam
+
+
+def _legacy_finalize_host(source, lam, q, cfg, budgets, st, dtype,
+                          double_buffer):
+    """The three-pass legacy finalize, host-fed (benchmark baseline)."""
+    metrics_step, hist_step, apply_step = (
+        st["metrics_step"], st["hist_step"], st["apply_step"])
+    r, primal, dual_sum, lo, hi = _epoch(
+        source, metrics_step, _metrics_init(source.k, lam.dtype),
+        (lam,), dtype, double_buffer)
+    dual = dual_sum + _pinned_dot(lam, budgets)
+    if not cfg.postprocess:
+        return StreamResult(lam, None, r, primal, dual,
+                            jnp.asarray(-jnp.inf, lam.dtype))
+    edges = profit_edges(lo, hi, cfg.profit_buckets)
+    hist = _epoch(
+        source, hist_step,
+        jnp.zeros((source.k, cfg.profit_buckets + 1), lam.dtype),
+        (lam, edges), dtype, double_buffer)
+    tau = threshold_from_removable_hist(hist, edges, r, budgets)
+    r2, primal2 = _epoch(
+        source, apply_step,
+        (jnp.zeros_like(r), jnp.zeros((), lam.dtype)),
+        (lam, tau), dtype, double_buffer)
+    return StreamResult(lam, None, r2, primal2, dual, tau)
+
+
+def solve_streaming_host(source: HostChunkSource,
+                         cfg: SolverConfig = SolverConfig(), q: int = 1,
+                         lam0=None, double_buffer: bool = True) -> StreamResult:
+    """Solve a host-fed sparse GKP, chunks uploaded as they are consumed.
+
+    The host-side twin of ``chunked.solve_streaming``: the iteration
+    loop runs in Python (one *epoch* over the chunks per SCD/DD
+    iteration, early exit at convergence), every per-chunk device step
+    is the same accumulation the traced scan performs — carry-seeded
+    histogram, donated buffers — and the finalize follows
+    ``cfg.stream_finalize`` ("fused": one epoch; "legacy": three). With
+    ``double_buffer`` (default) the next chunk's production and H2D
+    transfer overlap the current chunk's compute.
+
+    Results are bit-identical to ``solve_streaming`` over an
+    ``array_source`` holding the same rows and chunking (same
+    accumulation functions, same update arithmetic, same finalize), so
+    the traced driver remains this one's oracle. Restrictions: sparse
+    SCD (sync) and DD only — ``cd_mode="cyclic"`` would re-feed the
+    source K times per iteration and is rejected — and the same
+    ``record_history`` rule as the traced driver (resident solves or
+    ``cfg.metrics_every`` sampling; sampling is not implemented host-side
+    yet, so any ``record_history=True`` raises here).
+    """
+    # Host-specific rejections come first: _validate_stream_cfg's
+    # record_history message recommends cfg.metrics_every sampling, which
+    # only the traced driver implements — following that advice here
+    # would just trade one error for another.
+    if cfg.record_history:
+        raise ValueError(
+            "record_history is not supported by the host-fed driver; use "
+            "the traced solve_streaming with cfg.metrics_every sampling, "
+            "or a resident solve")
+    _validate_stream_cfg(cfg)
+    if cfg.algo == "scd" and cfg.cd_mode != "sync":
+        raise ValueError(
+            "solve_streaming_host supports cd_mode='sync' (cyclic CD "
+            "re-feeds the whole source K times per iteration)")
+    dtype = cfg.dtype
+    budgets = jnp.asarray(source.budgets, dtype)
+    lam = (jnp.ones((source.k,), dtype) if lam0 is None
+           else jnp.asarray(lam0, dtype))
+    lam = _presolve_host(source, lam, q, cfg)
+    st = _jit_steps(cfg, q)
+
+    dprev = jnp.zeros_like(lam)
+    iters = 0
+    for _ in range(cfg.max_iters):
+        if cfg.algo == "dd":
+            r = _epoch(source, st["dd_step"], jnp.zeros_like(lam), (lam,),
+                       dtype, double_buffer)
+            lam, dprev, moved = st["dd_tail"](r, lam, dprev, budgets)
+        else:
+            edges = make_edges(lam, cfg.bucket_delta, cfg.bucket_growth,
+                               cfg.bucket_half)
+            hist0 = jnp.zeros((source.k, edges.shape[-1] + 1), jnp.float32)
+            top0 = jnp.full((source.k,), -jnp.inf, lam.dtype)
+            hist, top = _epoch(source, st["scd_step"], (hist0, top0),
+                               (lam, edges), dtype, double_buffer)
+            lam, dprev, moved = st["scd_tail"](hist, top, lam, dprev,
+                                               budgets, edges)
+        iters += 1
+        if not bool(moved):
+            break
+
+    if cfg.stream_finalize == "legacy":
+        res = _legacy_finalize_host(source, lam, q, cfg, budgets, st, dtype,
+                                    double_buffer)
+        return res._replace(iters=jnp.int32(iters))
+
+    pedges = st["pedges"]
+    init = _metrics_init(source.k, lam.dtype)
+    if cfg.postprocess:
+        init = init + (jnp.zeros((source.k, pedges.shape[0] + 1), lam.dtype),
+                       jnp.zeros((pedges.shape[0] + 1,), lam.dtype))
+    out = _epoch(source, st["fused_step"], init, (lam,), dtype, double_buffer)
+    r, primal, dual_sum = out[0], out[1], out[2]
+    dual = dual_sum + _pinned_dot(lam, budgets)
+    if cfg.postprocess:
+        tau, removed_cons, removed_gain = threshold_and_removed(
+            out[5], out[6], pedges, r, budgets)
+        r = r - removed_cons
+        primal = primal - removed_gain
+    else:
+        tau = jnp.asarray(-jnp.inf, lam.dtype)
+    return StreamResult(lam, jnp.int32(iters), r, primal, dual, tau)
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_steps(cfg, q):
+    """Jitted per-chunk steps and update tails for one (cfg, q).
+
+    Cached on the (hashable) config so repeated host-fed solves — and
+    the benchmark's warm-up solve — reuse the compiled programs instead
+    of re-jitting per call. Every step donates its carry (argument 0):
+    the constant-size accumulators are updated in place chunk by chunk.
+    """
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def dd_step(r, p_c, b_c, lam):
+        x = select_sparse(p_c, b_c, lam, q)
+        return r + jnp.sum(b_c * x.astype(b_c.dtype), axis=0)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def scd_step(carry, p_c, b_c, lam, edges):
+        # No straggler keep/scale: the host driver is single-process, so
+        # the traced path's mask is identically 1.0 there — and f32
+        # multiplication by 1.0 is exact, so omitting it is bitwise
+        # equivalent (the parity tests pin this).
+        hist, top = carry
+        return scd_chunk_accumulate(p_c, b_c, lam, edges, q, cfg, hist, top)
+
+    @jax.jit
+    def scd_tail(hist, top, lam, dprev, budgets, edges):
+        prop = threshold_from_hist(hist, edges, budgets, top)
+        return damped_multiplier_step(lam, dprev, prop, cfg)
+
+    @jax.jit
+    def dd_tail(r, lam, dprev, budgets):
+        prop = jnp.maximum(lam + cfg.dd_lr * (r - budgets), 0.0)
+        return damped_multiplier_step(lam, dprev, prop, cfg)
+
+    pedges = profit_edges_fixed(cfg.profit_buckets, cfg.profit_ladder_lo,
+                                cfg.profit_ladder_hi, cfg.dtype)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def fused_step(carry, p_c, b_c, lam):
+        return finalize_chunk_accumulate(
+            p_c, b_c, lam, q, cfg, carry,
+            pedges if cfg.postprocess else None)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def metrics_step(carry, p_c, b_c, lam):
+        return finalize_chunk_accumulate(p_c, b_c, lam, q, cfg, carry)
+
+    def _pt(p_c, b_c, lam, x):
+        # The pinned row reduction of chunked._chunk_primal.
+        return jax.lax.optimization_barrier(jnp.sum(
+            jnp.where(x, adjusted_profit_chunk(p_c, b_c, lam), 0.0),
+            axis=-1))
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def hist_step(hist, p_c, b_c, lam, edges):
+        x = select_sparse(p_c, b_c, lam, q)
+        cons = b_c * x.astype(b_c.dtype)
+        return removable_hist(_pt(p_c, b_c, lam, x), cons, edges, init=hist)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def apply_step(carry, p_c, b_c, lam, tau):
+        r2, primal2 = carry
+        x = select_sparse(p_c, b_c, lam, q)
+        cons = b_c * x.astype(b_c.dtype)
+        keep_row = _pt(p_c, b_c, lam, x) > tau
+        x = x & keep_row[:, None]
+        cons = cons * keep_row[:, None].astype(cons.dtype)
+        return (r2 + jnp.sum(cons, axis=0),
+                primal2 + jnp.sum(jnp.where(x, p_c, 0.0)))
+
+    return {"dd_step": dd_step, "scd_step": scd_step, "scd_tail": scd_tail,
+            "dd_tail": dd_tail, "fused_step": fused_step,
+            "metrics_step": metrics_step, "hist_step": hist_step,
+            "apply_step": apply_step, "pedges": pedges}

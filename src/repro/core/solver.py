@@ -350,15 +350,35 @@ def dual_objective(kp, lam, q, axis=None, primal=None):
 # Driver.
 # --------------------------------------------------------------------------
 
+def damped_multiplier_step(lam, dprev, prop, cfg):
+    """One damped fixed-point step: proposed lam -> (lam_new, delta, moved).
+
+    The single definition of the reversal-damping and convergence
+    arithmetic (see :func:`iterate_multipliers` for the rationale),
+    shared by the traced drivers here and the host-fed epoch driver
+    (core/prefetch.py) — a second copy would silently break their
+    bit-identical-trajectory contract the first time one was edited.
+    """
+    delta = prop - lam
+    if cfg.cd_damping < 1.0 and cfg.algo == "scd":
+        delta = delta * jnp.where(delta * dprev < 0.0, cfg.cd_damping, 1.0)
+    lam_new = lam + delta
+    moved = jnp.max(jnp.abs(lam_new - lam)) > cfg.tol * (1.0 + jnp.max(lam))
+    return lam_new, delta, moved
+
+
 def iterate_multipliers(update, lam0, cfg, metrics_fn=None):
     """Run the damped multiplier fixed-point iteration to convergence.
 
     ``update``: lam -> proposed lam (one Alg 2/4 iteration at lam).
-    ``metrics_fn``: lam -> history record dict, called per iteration when
-    ``cfg.record_history`` (fixed-length ``lax.scan``, converged
-    iterations frozen); otherwise a ``lax.while_loop`` exits at
-    convergence. Both drivers share one step function, so lam / iters
-    trajectories are bit-identical between them.
+    ``metrics_fn``: (lam, it) -> history record dict, called per
+    iteration when ``cfg.record_history`` (fixed-length ``lax.scan``,
+    converged iterations frozen; ``it`` is the just-finished iteration
+    number, frozen too, so samplers like the streaming
+    ``cfg.metrics_every`` path can key off it); otherwise a
+    ``lax.while_loop`` exits at convergence. Both drivers share one step
+    function, so lam / iters trajectories are bit-identical between
+    them.
 
     Damping (``cfg.cd_damping``, SCD only): a coordinate whose step
     reverses sign relative to the previous iteration
@@ -376,21 +396,15 @@ def iterate_multipliers(update, lam0, cfg, metrics_fn=None):
 
     Returns (lam, iters, history).
     """
-    damp = cfg.cd_damping < 1.0 and cfg.algo == "scd"
-
     def step(carry, _):
         lam, dprev, it, done = carry
         prop = update(lam)
-        delta = prop - lam
-        if damp:
-            delta = delta * jnp.where(delta * dprev < 0.0, cfg.cd_damping, 1.0)
-        lam_new = lam + delta
-        moved = jnp.max(jnp.abs(lam_new - lam)) > cfg.tol * (1.0 + jnp.max(lam))
+        lam_new, delta, moved = damped_multiplier_step(lam, dprev, prop, cfg)
         lam_next = jnp.where(done, lam, lam_new)
         d_next = jnp.where(done, dprev, delta)
         it_next = it + jnp.where(done, 0, 1).astype(jnp.int32)
         done_next = done | ~moved
-        rec = metrics_fn(lam_next) if cfg.record_history else None
+        rec = metrics_fn(lam_next, it_next) if cfg.record_history else None
         return (lam_next, d_next, it_next, done_next), rec
 
     init = (lam0, jnp.zeros_like(lam0), jnp.int32(0), jnp.asarray(False))
@@ -431,7 +445,7 @@ def _solve_local(kp, lam0, q, cfg, axis=None):
     update_fn = _scd_update if cfg.algo == "scd" else _dd_update
     update = functools.partial(update_fn, kp, q=q, cfg=cfg, axis=axis)
 
-    def metrics_fn(lam):
+    def metrics_fn(lam, _it):
         _, _, r, primal, dual, viol = _metrics(kp, lam, q, axis)
         return {
             "lam": lam,

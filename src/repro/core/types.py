@@ -111,6 +111,23 @@ class SolverConfig:
     partial_fraction: float = 1.0
     # Record per-iteration (lam, primal, dual, gap, violation) traces.
     record_history: bool = False
+    # Streaming solves only: with record_history, compute the streamed
+    # metrics every this-many iterations (each sample is one extra pass
+    # over the chunk source; unsampled rows record NaN scalars). 0
+    # disables sampling, which makes record_history=True an error when
+    # streaming — see core/chunked.stream_solve_fn.
+    metrics_every: int = 0
+    # Streaming finalize strategy (core/chunked.py): "fused" folds the
+    # final metrics, the §5.4 removable histograms and the projection
+    # into ONE pass over the chunk source (iters + 1 total); "legacy"
+    # keeps the PR-2 three-pass finalize (metrics, histogram, apply;
+    # iters + 3) as the oracle/benchmark baseline. See DESIGN.md §5c.
+    stream_finalize: str = "fused"
+    # §5.4 group-profit ladder: bucket count (both finalize paths) and
+    # the fixed geometric range of the fused single-pass ladder.
+    profit_buckets: int = 512
+    profit_ladder_lo: float = 1e-6
+    profit_ladder_hi: float = 1e6
     # Use the Pallas kernels for the sparse map + histogram (TPU target;
     # interpret-mode on CPU — slow, used for integration testing).
     use_kernels: bool = False

@@ -87,3 +87,37 @@ def sparse_chunk_source(seed, n, k, chunk, q=1, tightness=0.5, b_high=1.0):
         return jnp.where(live, p, 0.0), jnp.where(live, b, 0.0)
 
     return ChunkSource(n=n, k=k, chunk=chunk, budgets=budgets, fn=fn)
+
+
+def sparse_host_chunk_source(seed, n, k, chunk, q=1, tightness=0.5,
+                             b_high=1.0):
+    """Host-side twin of :func:`sparse_chunk_source`: NumPy chunks.
+
+    Chunk ``i`` is a pure function of ``(seed, i)`` generated with
+    NumPy's Philox generator *on the host thread* — the stand-in for a
+    real dataset file in the host-fed streaming pipeline
+    (core/prefetch.py): the bench uses it to measure double-buffered vs
+    synchronous feeding without disk variance, and it keeps the
+    restart-determinism contract (any worker regenerates its chunks
+    byte-identically). Same workload shape and budget scaling as the
+    traced generator; the RNG streams differ (numpy vs jax.random), so
+    the *instances* are not row-identical across the two — use
+    ``prefetch.host_array_source`` when a host/device parity oracle is
+    needed.
+    """
+    import numpy as np
+
+    from ..core.prefetch import HostChunkSource
+
+    budgets = np.full((k,), tightness * n * q * (b_high / 2.0) / k,
+                      np.float32)
+
+    def fn(i):
+        rng = np.random.Generator(np.random.Philox(key=seed, counter=i))
+        p = rng.random((chunk, k), np.float32)
+        b = rng.random((chunk, k), np.float32) * np.float32(b_high)
+        live = ((i * chunk + np.arange(chunk)) < n)[:, None]
+        return np.where(live, p, 0.0).astype(np.float32), \
+            np.where(live, b, 0.0).astype(np.float32)
+
+    return HostChunkSource(n=n, k=k, chunk=chunk, budgets=budgets, fn=fn)

@@ -14,6 +14,7 @@ from . import ref
 from .adjusted_topc import adjusted_topc as _adjusted_topc
 from .bucket_hist import bucket_hist as _bucket_hist
 from .scd_candidates import scd_candidates as _scd_candidates
+from .scd_fused import scd_finalize_hist as _scd_finalize_hist
 from .scd_fused import scd_fused_hist as _scd_fused_hist
 
 _TILE_LADDER = (512, 256, 128)
@@ -71,3 +72,17 @@ def scd_fused_hist(p, b, lam, edges, q, use_pallas=True, **kw):
             p, b, lam, edges, q,
             hist_init=kw.get("hist_init"), top_init=kw.get("top_init"))
     return _scd_fused_hist(p, b, lam, edges, q, **kw)
+
+
+def scd_finalize_hist(p, b, lam, pedges, q, use_pallas=True, **kw):
+    """Fused streaming-finalize pass (DESIGN.md §5c): the post-solve
+    metrics partials (r, primal, dual_sum, group-profit lo/hi) and the
+    §5.4 removable consumption/profit histograms, accumulated in one
+    VMEM grid pass. Seed the ``*_init`` accumulators when scanning user
+    chunks (carry-seeded, like :func:`scd_fused_hist`; the ref oracle
+    combines seeds at allclose level only). Returns (cons_hist,
+    gain_hist, r, primal, dual_sum, lo, hi)."""
+    if not use_pallas:
+        kw.pop("tile_n", None)
+        return ref.scd_finalize_ref(p, b, lam, pedges, q, **kw)
+    return _scd_finalize_hist(p, b, lam, pedges, q, **kw)

@@ -68,6 +68,52 @@ def scd_fused_hist_ref(p, b, lam, edges, q, hist_init=None, top_init=None):
     return hist, top
 
 
+def scd_finalize_ref(p, b, lam, pedges, q, with_hist=True,
+                     cons_hist_init=None, gain_hist_init=None, r_init=None,
+                     sums_init=None, maxs_init=None):
+    """Streaming-finalize oracle: metrics partials + §5.4 histograms.
+
+    Matches ``kernels.scd_fused.scd_finalize_hist`` at allclose level
+    (per the repo's kernel-oracle convention the seed combination and the
+    tile-grouped sums differ in the last ulp; bucket *indices* are
+    bit-identical because pt is the same per-row reduction on both
+    sides). Returns the same 7-tuple: (cons_hist (K, E+1), gain_hist
+    (E+1,), r (K,), primal (), dual_sum (), lo (), hi ()); the
+    histograms are None when ``with_hist`` is False.
+    """
+    x, cons = adjusted_topc_ref(p, b, lam, q)
+    ap = p - lam[None, :] * b
+    gain = jnp.sum(jnp.where(x, p, 0.0), axis=-1)            # (n,)
+    pt = jnp.sum(jnp.where(x, ap, 0.0), axis=-1)             # (n,)
+    r = jnp.sum(cons, axis=0).astype(jnp.float32)
+    primal = jnp.sum(jnp.where(x, p, 0.0)).astype(jnp.float32)
+    dual_sum = jnp.sum(jnp.where(x, ap, 0.0)).astype(jnp.float32)
+    sel = jnp.any(x, axis=-1)
+    inf = jnp.asarray(jnp.inf, p.dtype)
+    lo = jnp.min(jnp.where(sel, pt, inf))
+    hi = jnp.max(jnp.where(sel, pt, -inf))
+    if r_init is not None:
+        r = r + r_init
+    if sums_init is not None:
+        primal = primal + sums_init[0]
+        dual_sum = dual_sum + sums_init[1]
+    if maxs_init is not None:
+        hi = jnp.maximum(hi, maxs_init[0])
+        lo = jnp.minimum(lo, -maxs_init[1])
+    if not with_hist:
+        return None, None, r, primal, dual_sum, lo, hi
+    e = pedges.shape[-1]
+    idx = jnp.searchsorted(pedges, pt, side="left")          # (n,)
+    onehot = jax.nn.one_hot(idx, e + 1, dtype=jnp.float32)   # (n, E+1)
+    ch = jnp.einsum("nb,nk->kb", onehot, cons.astype(jnp.float32))
+    gh = jnp.einsum("nb,n->b", onehot, gain.astype(jnp.float32))
+    if cons_hist_init is not None:
+        ch = ch + cons_hist_init
+    if gain_hist_init is not None:
+        gh = gh + gain_hist_init
+    return ch, gh, r, primal, dual_sum, lo, hi
+
+
 def bucket_hist_ref(v1, v2, edges):
     """Section 5.2 histogram: mass of v2 per (knapsack, bucket).
 

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ._util import pad_rows
+from .adjusted_topc import _topq_mask
 from .bucket_hist import hist_block
 from .scd_candidates import candidates_block
 
@@ -113,3 +114,179 @@ def scd_fused_hist(p, b, lam, edges, q, tile_n=512, interpret=None,
     )(p, b, lam2, edges.astype(p.dtype),
       hist_init.astype(jnp.float32), top_init.reshape(1, k).astype(p.dtype))
     return hist, top[0]
+
+
+def finalize_block(p, b, lam, q):
+    """Primal map for one VMEM-resident block of the streaming finalize.
+
+    p, b: (tile_n, K); lam: (1, K). Returns (x bool, cons, gain (tile, 1),
+    pt (tile, 1)): the Alg-1 greedy selection at lam, its consumption,
+    and per-user raw/cost-adjusted selected profit. ``pt`` is the sum of
+    selected adjusted profits — the sparse group profit of §5.4 — in the
+    per-row reduction form shared with the jnp streaming body
+    (core/chunked.py), so kernel and jnp paths bin it into identical
+    buckets (a half-ulp difference would shift whole mass units between
+    adjacent buckets).
+    """
+    ap = p - lam * b
+    x = _topq_mask(ap, q)
+    cons = jnp.where(x, b, jnp.zeros_like(b))
+    gain = jnp.sum(jnp.where(x, p, jnp.zeros_like(p)), axis=1, keepdims=True)
+    pt = jnp.sum(jnp.where(x, ap, jnp.zeros_like(ap)), axis=1, keepdims=True)
+    return x, cons, gain, pt
+
+
+def _finalize_kernel(p_ref, b_ref, lam_ref, *refs, q, with_hist):
+    """One kernel body for both finalize variants (metrics ± histograms).
+
+    The bit-exactness-critical metrics accumulation exists once; the
+    ``with_hist`` closure only decides whether the §5.4 histogram refs
+    are present and binned into. Ref order matches the pallas_call specs
+    built in :func:`scd_finalize_hist`.
+    """
+    if with_hist:
+        (pedges_ref, ch0_ref, gh0_ref, r0_ref, s0_ref, m0_ref,
+         ch_ref, gh_ref, r_ref, s_ref, m_ref) = refs
+    else:
+        r0_ref, s0_ref, m0_ref, r_ref, s_ref, m_ref = refs
+    x, cons, gain, pt = finalize_block(p_ref[...], b_ref[...], lam_ref[...], q)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        if with_hist:
+            ch_ref[...] = ch0_ref[...]
+            gh_ref[...] = gh0_ref[...]
+        r_ref[...] = r0_ref[...]
+        s_ref[...] = s0_ref[...]
+        m_ref[...] = m0_ref[...]
+
+    r_ref[...] += jnp.sum(cons, axis=0, keepdims=True).astype(jnp.float32)
+    primal = jnp.sum(jnp.where(x, p_ref[...], 0.0), keepdims=True)
+    dual = jnp.sum(jnp.where(x, p_ref[...] - lam_ref[...] * b_ref[...], 0.0),
+                   keepdims=True)
+    s_ref[...] += jnp.concatenate(
+        [primal.reshape(1, 1), dual.reshape(1, 1)], axis=1).astype(jnp.float32)
+    # Group-profit range over users with any selection; inert/empty rows
+    # are excluded (their pt = 0 carries no removable mass anyway). lo is
+    # tracked negated so one maximum-combine covers both ends.
+    sel = jnp.any(x, axis=1, keepdims=True)
+    inf = jnp.asarray(jnp.inf, pt.dtype)
+    hi = jnp.max(jnp.where(sel, pt, -inf), keepdims=True).reshape(1, 1)
+    nlo = jnp.max(jnp.where(sel, -pt, -inf), keepdims=True).reshape(1, 1)
+    m_ref[...] = jnp.maximum(m_ref[...], jnp.concatenate([hi, nlo], axis=1))
+    if not with_hist:
+        return
+    # §5.4 removable histograms: searchsorted-left edge-ladder binning of
+    # pt (same convention as hist_block), mass = consumption / raw profit.
+    tile_n = pt.shape[0]
+    e = pedges_ref.shape[-1]
+    idx = jnp.sum(pt > pedges_ref[...], axis=1).astype(jnp.int32)  # (tile,)
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (tile_n, e + 1), 1)
+    onehot = (buckets == idx[:, None]).astype(jnp.float32)
+    ch_ref[...] += jnp.einsum("nb,nk->kb", onehot, cons.astype(jnp.float32))
+    gh_ref[...] += jnp.sum(onehot * gain.astype(jnp.float32), axis=0,
+                           keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("q", "tile_n", "interpret", "with_hist"))
+def scd_finalize_hist(p, b, lam, pedges, q, tile_n=512, interpret=None,
+                      with_hist=True, cons_hist_init=None,
+                      gain_hist_init=None, r_init=None, sums_init=None,
+                      maxs_init=None):
+    """Fused streaming-finalize pass: metrics partials + §5.4 histograms.
+
+    One grid pass over the user tiles computes everything the streaming
+    solve needs after convergence — the greedy primal selection at
+    ``lam``, its consumption ``r``, the primal / dual-sum scalars, the
+    group-profit range, and (``with_hist``) the removable consumption and
+    raw-profit histograms binned against the fixed ladder ``pedges``
+    (E,) — accumulating all of it in VMEM across the grid, exactly like
+    :func:`scd_fused_hist` does for the per-iteration reduce. This is
+    the kernel behind the iters+1 pass accounting of DESIGN.md §5c: the
+    legacy finalize runs three separate passes for the same outputs.
+
+    Returns ``(cons_hist (K, E+1), gain_hist (E+1,), r (K,), primal (),
+    dual_sum (), lo (), hi ())`` — all f32 except lo/hi in p.dtype; the
+    first two are None when ``with_hist=False`` (metrics-only variant,
+    used by the sampled-history path). The ``*_init`` seeds continue a
+    carried accumulation chunk by chunk (input/output aliased, in-place
+    on TPU): because the seeds initialise the running VMEM accumulators,
+    the f32 chain over tiles is the one a single whole-shard call
+    performs, so chunked and unchunked finalizes are bit-identical under
+    the same tile decomposition — the same contract as
+    :func:`scd_fused_hist`. Ragged n pads with inert (p = b = 0) rows:
+    nothing is selected there, so they contribute zero mass everywhere
+    and never touch the lo/hi range.
+    """
+    n, k = p.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    tile_n = min(tile_n, n)
+    pad = -n % tile_n
+    p = pad_rows(p, pad)
+    b = pad_rows(b, pad)
+    grid = ((n + pad) // tile_n,)
+    lam2 = lam.reshape(1, k).astype(p.dtype)
+    if r_init is None:
+        r_init = jnp.zeros((k,), jnp.float32)
+    if sums_init is None:
+        sums_init = jnp.zeros((2,), jnp.float32)
+    if maxs_init is None:
+        maxs_init = jnp.full((2,), -jnp.inf, p.dtype)
+    r_init = r_init.reshape(1, k).astype(jnp.float32)
+    sums_init = sums_init.reshape(1, 2).astype(jnp.float32)
+    maxs_init = maxs_init.reshape(1, 2).astype(p.dtype)
+    scalar_specs = [
+        pl.BlockSpec((1, k), lambda i: (0, 0)),
+        pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        pl.BlockSpec((1, 2), lambda i: (0, 0)),
+    ]
+    scalar_shapes = [
+        jax.ShapeDtypeStruct((1, k), jnp.float32),
+        jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        jax.ShapeDtypeStruct((1, 2), p.dtype),
+    ]
+    row_specs = [
+        pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+        pl.BlockSpec((tile_n, k), lambda i: (i, 0)),
+        pl.BlockSpec((1, k), lambda i: (0, 0)),
+    ]
+    if not with_hist:
+        r, s, m = pl.pallas_call(
+            functools.partial(_finalize_kernel, q=q, with_hist=False),
+            grid=grid,
+            in_specs=row_specs + scalar_specs,
+            out_specs=scalar_specs,
+            out_shape=scalar_shapes,
+            input_output_aliases={3: 0, 4: 1, 5: 2},
+            interpret=interpret,
+        )(p, b, lam2, r_init, sums_init, maxs_init)
+        return (None, None, r[0], s[0, 0], s[0, 1], -m[0, 1], m[0, 0])
+    e = pedges.shape[-1]
+    if cons_hist_init is None:
+        cons_hist_init = jnp.zeros((k, e + 1), jnp.float32)
+    if gain_hist_init is None:
+        gain_hist_init = jnp.zeros((e + 1,), jnp.float32)
+    hist_specs = [
+        pl.BlockSpec((k, e + 1), lambda i: (0, 0)),
+        pl.BlockSpec((1, e + 1), lambda i: (0, 0)),
+    ]
+    hist_shapes = [
+        jax.ShapeDtypeStruct((k, e + 1), jnp.float32),
+        jax.ShapeDtypeStruct((1, e + 1), jnp.float32),
+    ]
+    ch, gh, r, s, m = pl.pallas_call(
+        functools.partial(_finalize_kernel, q=q, with_hist=True),
+        grid=grid,
+        in_specs=row_specs + [pl.BlockSpec((1, e), lambda i: (0, 0))]
+        + hist_specs + scalar_specs,
+        out_specs=hist_specs + scalar_specs,
+        out_shape=hist_shapes + scalar_shapes,
+        input_output_aliases={4: 0, 5: 1, 6: 2, 7: 3, 8: 4},
+        interpret=interpret,
+    )(p, b, lam2, pedges.reshape(1, e).astype(p.dtype),
+      cons_hist_init.astype(jnp.float32),
+      gain_hist_init.reshape(1, e + 1).astype(jnp.float32),
+      r_init, sums_init, maxs_init)
+    return (ch, gh[0], r[0], s[0, 0], s[0, 1], -m[0, 1], m[0, 0])

@@ -314,7 +314,7 @@ def _probe_block(cfg, cell, mesh, multi_pod):
 def lower_paper_kp(workload: str, multi_pod: bool = True,
                    reduce: str = "bucketed", algo: str = "scd",
                    max_iters: int = 2, chunk_size: int = None,
-                   streaming: bool = False):
+                   streaming: bool = False, stream_finalize: str = "fused"):
     """One jitted solve of the paper-scale sparse GKP sharded over every
     device of the production mesh. ``reduce``/``algo`` select the §Perf
     A/B variants (exact gather vs §5.2 bucketed psum; DD vs SCD).
@@ -324,7 +324,9 @@ def lower_paper_kp(workload: str, multi_pod: bool = True,
     chunks are synthesized inside the program — its memory_analysis shows
     argument + temp bytes independent of N, the headline of the chunked
     solve path (compare against the resident lowering, whose argument
-    bytes are 8·N·K)."""
+    bytes are 8·N·K). ``stream_finalize`` picks the single-pass fused
+    finalize or the legacy three-pass one (DESIGN.md §5c), so the two
+    lowered programs' cost/collective profiles can be diffed."""
     from repro.core import SolverConfig, SparseKP
     from repro.core.solver import _solve_entry
     import functools
@@ -336,7 +338,8 @@ def lower_paper_kp(workload: str, multi_pod: bool = True,
     n = (wl.n_users // mesh.size) * mesh.size
     k = wl.k
     cfg = SolverConfig(algo=algo, reduce=reduce, max_iters=max_iters,
-                       postprocess=True, chunk_size=chunk_size)
+                       postprocess=True, chunk_size=chunk_size,
+                       stream_finalize=stream_finalize)
     t0 = time.time()
     if streaming:
         if reduce != "bucketed":
@@ -407,6 +410,10 @@ def main():
     ap.add_argument("--streaming", action="store_true",
                     help="paper-kp: lower the out-of-core driver "
                          "(core/chunked.py) — argument/temp bytes flat in N")
+    ap.add_argument("--stream-finalize", choices=["fused", "legacy"],
+                    default="fused",
+                    help="paper-kp --streaming: fused single-pass finalize "
+                         "vs the legacy three-pass one (DESIGN.md §5c)")
     ap.add_argument("--no-probe", action="store_true")
     ap.add_argument("--unrolled", action="store_true",
                     help="disable scan-over-layers (exact HLO flops)")
@@ -422,7 +429,8 @@ def main():
         r = lower_paper_kp(args.paper_kp, multi_pod=True,
                            reduce=args.reduce, algo=args.algo,
                            chunk_size=args.chunk_size,
-                           streaming=args.streaming)
+                           streaming=args.streaming,
+                           stream_finalize=args.stream_finalize)
         print(json.dumps(r, indent=2))
         results.append(r)
     elif args.all:

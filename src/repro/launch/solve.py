@@ -16,7 +16,13 @@ chunked-vs-unchunked contract). ``--streaming`` additionally stops
 materialising the instance at all: chunks are synthesized on demand
 inside the solve (core/chunked.py), so N is bounded by patience, not
 device memory — this is the out-of-core mode the chunked benchmark uses
-to run far past the unchunked ceiling.
+to run far past the unchunked ceiling. A converged streaming solve
+touches the source iters + 1 times (``--stream-finalize legacy`` keeps
+the three-pass finalize, iters + 3 — see DESIGN.md §5c). ``--host-feed``
+swaps in the host-fed pipeline (core/prefetch.py): chunks are produced
+as NumPy arrays on the host and uploaded with double-buffered
+``device_put`` (``--no-double-buffer`` for the synchronous baseline) —
+the mode a real on-disk dataset runs in.
 """
 from __future__ import annotations
 
@@ -30,7 +36,8 @@ from repro.configs.paper_kp import WORKLOADS, KPWorkload
 from repro.core import SolverConfig, solve, solve_sharded
 from repro.core.chunked import solve_streaming
 from repro.core.instances import shard_key, sparse_instance
-from repro.data.synth import sparse_chunk_source
+from repro.core.prefetch import solve_streaming_host
+from repro.data.synth import sparse_chunk_source, sparse_host_chunk_source
 
 
 def _mesh():
@@ -72,19 +79,29 @@ def run(workload: KPWorkload, cfg: SolverConfig, seed=0, mesh=None):
 
 
 def run_streaming(workload: KPWorkload, cfg: SolverConfig, chunk: int,
-                  seed=0, mesh=None):
+                  seed=0, mesh=None, host_feed=False, double_buffer=True):
     """Out-of-core solve of a §6 workload: chunks generated on demand.
 
     Nothing O(N) is ever materialised (device state is O(chunk·K + K·E));
     the decision matrix is not returned — stream it per chunk with
     ``core.chunked.decisions_chunk`` using the reported (lam, tau).
+    ``host_feed`` produces the chunks as NumPy arrays on the host and
+    runs the prefetch pipeline (core/prefetch.py) instead of the traced
+    in-program generator — the path a real on-disk dataset takes.
     """
-    src = sparse_chunk_source(seed, workload.n_users, workload.k, chunk,
-                              q=workload.q, tightness=workload.tightness)
     t0 = time.time()
-    if mesh is None:
-        mesh = _mesh()
-    res = solve_streaming(src, cfg, q=workload.q, mesh=mesh)
+    if host_feed:
+        src = sparse_host_chunk_source(
+            seed, workload.n_users, workload.k, chunk, q=workload.q,
+            tightness=workload.tightness)
+        res = solve_streaming_host(src, cfg, q=workload.q,
+                                   double_buffer=double_buffer)
+    else:
+        src = sparse_chunk_source(seed, workload.n_users, workload.k, chunk,
+                                  q=workload.q, tightness=workload.tightness)
+        if mesh is None:
+            mesh = _mesh()
+        res = solve_streaming(src, cfg, q=workload.q, mesh=mesh)
     dt = time.time() - t0
     viol = float(jnp.max((res.r - src.budgets) / src.budgets))
     return {
@@ -124,6 +141,18 @@ def main():
                     help="out-of-core mode: synthesize chunks on demand, "
                          "never materialise the (N, K) instance "
                          "(requires --chunk-size)")
+    ap.add_argument("--stream-finalize", choices=["fused", "legacy"],
+                    default="fused",
+                    help="streaming finalize: one fused pass (iters + 1 "
+                         "source passes) or the legacy three-pass oracle "
+                         "(iters + 3); DESIGN.md §5c")
+    ap.add_argument("--host-feed", action="store_true",
+                    help="streaming mode with host-produced NumPy chunks "
+                         "through the double-buffered prefetch pipeline "
+                         "(core/prefetch.py)")
+    ap.add_argument("--no-double-buffer", action="store_true",
+                    help="host-feed only: synchronous device_put (the "
+                         "naive baseline the bench compares against)")
     args = ap.parse_args()
 
     wl = WORKLOADS[args.workload]
@@ -133,11 +162,14 @@ def main():
                        max_iters=args.max_iters,
                        presolve_samples=args.presolve,
                        use_kernels=args.use_kernels,
+                       stream_finalize=args.stream_finalize,
                        chunk_size=None if args.streaming else args.chunk_size)
-    if args.streaming:
+    if args.streaming or args.host_feed:
         if not args.chunk_size:
-            raise SystemExit("--streaming requires --chunk-size")
-        out = run_streaming(wl, cfg, args.chunk_size)
+            raise SystemExit("--streaming/--host-feed require --chunk-size")
+        out = run_streaming(wl, cfg, args.chunk_size,
+                            host_feed=args.host_feed,
+                            double_buffer=not args.no_double_buffer)
     else:
         out = run(wl, cfg)
     for k, v in out.items():

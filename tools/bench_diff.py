@@ -1,0 +1,98 @@
+"""Bench-regression smoke gate for the streamed solve.
+
+``python tools/bench_diff.py COMMITTED CURRENT [--tol 0.25]``
+
+Compares a freshly-measured ``BENCH_stream_passes.json`` (the CI smoke
+run) against the committed one, matching points by ``n``:
+
+* **Pass counts must match exactly** — they are deterministic (§5c
+  accounting: iters + 1 fused, iters + 3 legacy), so any drift means a
+  pass was silently reintroduced. This is the robust half of the gate.
+* **Wall time must not regress more than ``--tol``** (default 25%) on
+  the end-to-end streamed-solve configurations (device fused, host
+  double-buffered fused). Wall comparisons across machines are noisy —
+  hence the generous tolerance — but a fused finalize or prefetch
+  pipeline that quietly serialises shows up far above it. Iteration
+  counts are checked first: if they differ (e.g. a jax upgrade changed
+  convergence), wall comparison is skipped for that point with a
+  warning, since the solves are no longer like for like.
+
+Exit status 1 on any violation; the messages name the offending point.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# (section, config) pairs whose wall time is gated; every config's pass
+# count is checked regardless.
+WALL_GATED = [("device", "fused"), ("host", "double_buffered_fused")]
+
+
+def _points_by_n(report):
+    return {p["n"]: p for p in report.get("points", [])}
+
+
+def diff(committed: dict, current: dict, tol: float) -> list:
+    """Return a list of human-readable violations (empty = gate passes)."""
+    problems = []
+    base = _points_by_n(committed)
+    new = _points_by_n(current)
+    shared = sorted(set(base) & set(new))
+    if not shared:
+        return [f"no shared n between committed {sorted(base)} and "
+                f"current {sorted(new)}"]
+    for n in shared:
+        for section in ("device", "host"):
+            for config, entry in new[n][section].items():
+                if not isinstance(entry, dict):
+                    continue
+                ref = base[n][section].get(config)
+                if ref is None:
+                    continue
+                if entry["passes"] != ref["passes"]:
+                    if entry["iterations"] == ref["iterations"]:
+                        problems.append(
+                            f"n={n} {section}/{config}: source passes "
+                            f"{ref['passes']} -> {entry['passes']} at equal "
+                            f"iteration count (a pass was reintroduced?)")
+                    else:
+                        print(f"note: n={n} {section}/{config} iterations "
+                              f"{ref['iterations']} -> {entry['iterations']};"
+                              f" pass/wall comparison skipped")
+                        continue
+                if (section, config) in WALL_GATED:
+                    if entry["iterations"] != ref["iterations"]:
+                        print(f"note: n={n} {section}/{config} iteration "
+                              f"count changed; wall comparison skipped")
+                        continue
+                    if entry["wall_s"] > ref["wall_s"] * (1.0 + tol):
+                        problems.append(
+                            f"n={n} {section}/{config}: wall "
+                            f"{ref['wall_s']}s -> {entry['wall_s']}s "
+                            f"(> {tol:.0%} regression)")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("committed", help="committed BENCH_stream_passes.json")
+    ap.add_argument("current", help="freshly measured report to check")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed wall-time regression fraction")
+    args = ap.parse_args()
+    committed = json.loads(pathlib.Path(args.committed).read_text())
+    current = json.loads(pathlib.Path(args.current).read_text())
+    problems = diff(committed, current, args.tol)
+    for p in problems:
+        print(f"BENCH REGRESSION: {p}")
+    if problems:
+        sys.exit(1)
+    print(f"bench_diff: ok ({args.committed} vs {args.current}, "
+          f"tol {args.tol:.0%})")
+
+
+if __name__ == "__main__":
+    main()

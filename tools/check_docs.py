@@ -27,6 +27,7 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 PUBLIC_API = [
     "src/repro/core/solver.py",
     "src/repro/core/chunked.py",
+    "src/repro/core/prefetch.py",
     "src/repro/core/bucketing.py",
     "src/repro/core/postprocess.py",
     "src/repro/core/types.py",
