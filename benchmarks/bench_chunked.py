@@ -22,7 +22,12 @@ demonstrates that for the streaming driver (core/chunked.py):
   host-fed pipeline (core/prefetch.py) with double-buffered vs
   synchronous ``device_put`` — the combined fused+double-buffered
   speedup over legacy+synchronous is the headline number
-  ``tools/bench_diff.py`` gates against.
+  ``tools/bench_diff.py`` gates against. A ``checkpointed_fused``
+  entry measures the preemption-safety premium (DESIGN.md §7):
+  ``cfg.checkpoint_every=2`` atomic resume-state saves on the same
+  solve, reported as ``overhead_frac`` against the unprotected run
+  (the pass count must stay ``iters + 1`` — checkpointing never
+  re-reads the source beyond the one-chunk fingerprint probe).
 
 The CI smoke gate fails if the streaming program's footprint is not flat
 (<= 1% drift across n), if the big-n solve regresses infeasible, or if
@@ -197,6 +202,62 @@ def _timed_host_solve(n, cfg, double_buffer, seed=0):
     return res, wall, calls["n"] // n_chunks
 
 
+def _timed_host_ckpt_solve(n, cfg, seed=0):
+    """Double-buffered host solve with checkpointing on: the preemption
+    insurance premium. The fingerprint probe reads one extra chunk per
+    solve (not a pass); every save synchronises the carry and writes the
+    constant-size state atomically."""
+    import shutil
+    import tempfile
+
+    src = sparse_host_chunk_source(seed, n, K, CHUNK, q=Q, tightness=0.4)
+    calls = {"n": 0}
+    inner = src.fn
+
+    def fn(i):
+        calls["n"] += 1
+        return inner(i)
+
+    src = src._replace(fn=fn)
+    ckpt_cfg = cfg.replace(checkpoint_every=2)
+    warm = src._replace(n=CHUNK)
+    ckdir = tempfile.mkdtemp(prefix="bench_ckpt_")
+    from repro.checkpoint import ckpt as _ckpt
+
+    # Count save calls directly: the driver prunes the directory to the
+    # newest few steps, so globbing undercounts what the overhead paid for.
+    saves = {"n": 0}
+    real_save = _ckpt.save
+
+    def counting_save(*a, **kw):
+        saves["n"] += 1
+        return real_save(*a, **kw)
+
+    _ckpt.save = counting_save
+    try:
+        solve_streaming_host(warm, ckpt_cfg, q=Q, checkpoint_dir=ckdir)
+        wall = float("inf")
+        for _ in range(REPEATS):
+            shutil.rmtree(ckdir, ignore_errors=True)
+            calls["n"] = 0
+            saves["n"] = 0
+            t0 = time.perf_counter()
+            res = solve_streaming_host(src, ckpt_cfg, q=Q,
+                                       checkpoint_dir=ckdir)
+            jax.block_until_ready(res)
+            wall = min(wall, time.perf_counter() - t0)
+        n_ckpts = saves["n"]
+        latest = _ckpt.latest_step(ckdir)
+    finally:
+        _ckpt.save = real_save
+        shutil.rmtree(ckdir, ignore_errors=True)
+    n_chunks = -(-n // CHUNK)
+    fetches = calls["n"] - 1            # minus the fingerprint probe
+    assert fetches % n_chunks == 0, (calls["n"], n_chunks)
+    assert latest is not None
+    return res, wall, fetches // n_chunks, n_ckpts
+
+
 def _entry(wall, passes, res, budgets):
     return {"wall_s": round(wall, 4), "passes": passes,
             "wall_per_pass_s": round(wall / passes, 4),
@@ -245,15 +306,25 @@ def bench_passes_point(n, use_kernels=True, max_iters=12):
     res_db, wall_db, passes_db = _timed_host_solve(n, fused, True)
     res_sf, wall_sf, passes_sf = _timed_host_solve(n, fused, False)
     res_sl, wall_sl, passes_sl = _timed_host_solve(n, legacy, False)
+    res_ck, wall_ck, passes_ck, n_ckpts = _timed_host_ckpt_solve(n, fused)
+    ckpt_entry = _entry(wall_ck, passes_ck, res_ck, budgets)
+    ckpt_entry["n_checkpoints"] = n_ckpts
+    ckpt_entry["overhead_frac"] = round(wall_ck / wall_db - 1.0, 4)
     out["host"] = {
         "double_buffered_fused": _entry(wall_db, passes_db, res_db, budgets),
         "synchronous_fused": _entry(wall_sf, passes_sf, res_sf, budgets),
         "synchronous_legacy": _entry(wall_sl, passes_sl, res_sl, budgets),
+        # Preemption-safety premium: the same double-buffered fused
+        # solve with cfg.checkpoint_every=2 writing atomic resume
+        # states (constant size; each save synchronises the carry).
+        "checkpointed_fused": ckpt_entry,
         "pipeline_speedup": round(wall_sf / wall_db, 3),
         "combined_speedup": round(wall_sl / wall_db, 3),
+        "checkpoint_overhead": ckpt_entry["overhead_frac"],
         "passes_ok": (passes_db == int(res_db.iters) + 1
                       and passes_sf == int(res_sf.iters) + 1
-                      and passes_sl == int(res_sl.iters) + 3),
+                      and passes_sl == int(res_sl.iters) + 3
+                      and passes_ck == int(res_ck.iters) + 1),
     }
     return out
 
@@ -296,7 +367,8 @@ def main() -> None:
     passes_ok = True
     if args.passes_out:
         ppoints = []
-        print("n,fused_passes,legacy_passes,finalize_x,pipeline_x,combined_x")
+        print("n,fused_passes,legacy_passes,finalize_x,pipeline_x,combined_x,"
+              "ckpt_overhead")
         for n in (PASSES_SMOKE_GRID if args.smoke else PASSES_GRID):
             p = bench_passes_point(n, use_kernels=not args.no_kernels)
             ppoints.append(p)
@@ -304,7 +376,8 @@ def main() -> None:
                   f"{p['device']['legacy']['passes']},"
                   f"{p['device']['finalize_speedup']},"
                   f"{p['host']['pipeline_speedup']},"
-                  f"{p['host']['combined_speedup']}")
+                  f"{p['host']['combined_speedup']},"
+                  f"{p['host']['checkpoint_overhead']}")
         passes_ok = all(p["device"]["passes_ok"] and p["host"]["passes_ok"]
                         for p in ppoints)
         preport = {

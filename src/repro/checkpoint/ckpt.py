@@ -63,7 +63,7 @@ def save(directory, step: int, tree) -> str:
         json.dump(manifest, f)
     if final.exists():
         shutil.rmtree(final)
-    os.rename(tmp, final)
+    os.replace(tmp, final)
     return str(final)
 
 
@@ -105,6 +105,39 @@ def restore(directory, step: int, like, sharding_tree=None):
             out.append(jax.device_put(arr))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), out)
+
+
+_KEY_RE = re.compile(r"\['([^']*)'\]")
+
+
+def restore_auto(directory, step: int, sharding_tree=None):
+    """Restore a checkpoint whose structure is a flat dict of arrays,
+    reconstructing the tree from the manifest alone (no ``like`` needed).
+
+    This is the entry point a *resuming* process uses when the saved
+    structure is part of what it must recover — e.g. the streaming
+    resume state (core/prefetch.py) stores the virtual-slot count as the
+    leading axis of its accumulator arrays, and the resumer cannot build
+    a ``like`` tree before knowing it. Only flat string-keyed dicts are
+    supported (leaf paths of the form ``['name']``). ``sharding_tree``:
+    optional dict mapping leaf names to shardings for elastic
+    re-placement on the current mesh (names absent from it are placed on
+    the default device).
+    """
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+    out = {}
+    for meta in manifest["leaves"]:
+        keys = _KEY_RE.findall(meta["path"])
+        assert len(keys) == 1 and f"['{keys[0]}']" == meta["path"], (
+            f"restore_auto supports flat dict checkpoints only, "
+            f"got leaf path {meta['path']!r}")
+        arr = np.load(d / meta["file"])
+        sh = (sharding_tree or {}).get(keys[0])
+        out[keys[0]] = jax.device_put(arr, sh) if sh is not None \
+            else jax.device_put(arr)
+    return out
 
 
 def prune(directory, keep: int = 3):

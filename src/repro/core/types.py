@@ -117,6 +117,13 @@ class SolverConfig:
     # disables sampling, which makes record_history=True an error when
     # streaming — see core/chunked.stream_solve_fn.
     metrics_every: int = 0
+    # Host-fed streaming solves only (core/prefetch.py): write a
+    # constant-size StreamCheckpointState through checkpoint/ckpt.py
+    # every this-many iterations (and, during the fused finalize pass,
+    # every this-many chunk columns), so a preempted solve resumes
+    # bitwise from `solve_streaming_host(resume_from=...)`. 0 disables.
+    # Requires a checkpoint_dir at the call site; see DESIGN.md §7.
+    checkpoint_every: int = 0
     # Streaming finalize strategy (core/chunked.py): "fused" folds the
     # final metrics, the §5.4 removable histograms and the projection
     # into ONE pass over the chunk source (iters + 1 total); "legacy"

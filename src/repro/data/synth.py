@@ -121,3 +121,25 @@ def sparse_host_chunk_source(seed, n, k, chunk, q=1, tightness=0.5,
             np.where(live, b, 0.0).astype(np.float32)
 
     return HostChunkSource(n=n, k=k, chunk=chunk, budgets=budgets, fn=fn)
+
+
+def sparse_host_shard_sources(seed, n, k, chunk, slots, q=1, tightness=0.5,
+                              b_high=1.0):
+    """Per-slot host sources of one §6 instance: the sharded-feed twin.
+
+    ``prefetch.sharded_source`` applied to :func:`sparse_host_chunk_source`
+    — slot ``s`` serves the contiguous chunk range the traced sharded
+    driver would hand shard ``s``, each chunk still a pure function of
+    ``(seed, global chunk index)``. Because the Philox counter is the
+    *global* index, a worker resumed after preemption — possibly owning
+    different slots on a smaller mesh — regenerates exactly the bytes
+    the lost worker streamed: the restart-determinism contract that
+    checkpoint/resume (``solve_streaming_host(resume_from=...)``)
+    requires of every source family. Returns a list of ``slots``
+    HostChunkSources.
+    """
+    from ..core.prefetch import sharded_source
+
+    return sharded_source(
+        sparse_host_chunk_source(seed, n, k, chunk, q=q, tightness=tightness,
+                                 b_high=b_high), slots)

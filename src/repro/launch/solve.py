@@ -22,7 +22,15 @@ the three-pass finalize, iters + 3 — see DESIGN.md §5c). ``--host-feed``
 swaps in the host-fed pipeline (core/prefetch.py): chunks are produced
 as NumPy arrays on the host and uploaded with double-buffered
 ``device_put`` (``--no-double-buffer`` for the synchronous baseline) —
-the mode a real on-disk dataset runs in.
+the mode a real on-disk dataset runs in. Host-fed solves shard over
+the mesh (virtual slots, ``--slots`` to pin more than one per device)
+and survive preemption: ``--checkpoint-dir D --checkpoint-every N``
+writes the atomic resume state, and a relaunch with ``--resume`` picks
+the solve back up bitwise (DESIGN.md §7), e.g.
+
+    python -m repro.launch.solve --n 16000000 --host-feed \
+        --chunk-size 65536 --checkpoint-dir ckpt/ --checkpoint-every 8 \
+        --resume
 """
 from __future__ import annotations
 
@@ -79,7 +87,8 @@ def run(workload: KPWorkload, cfg: SolverConfig, seed=0, mesh=None):
 
 
 def run_streaming(workload: KPWorkload, cfg: SolverConfig, chunk: int,
-                  seed=0, mesh=None, host_feed=False, double_buffer=True):
+                  seed=0, mesh=None, host_feed=False, double_buffer=True,
+                  checkpoint_dir=None, resume=False, slots=None):
     """Out-of-core solve of a §6 workload: chunks generated on demand.
 
     Nothing O(N) is ever materialised (device state is O(chunk·K + K·E));
@@ -87,15 +96,26 @@ def run_streaming(workload: KPWorkload, cfg: SolverConfig, chunk: int,
     ``core.chunked.decisions_chunk`` using the reported (lam, tau).
     ``host_feed`` produces the chunks as NumPy arrays on the host and
     runs the prefetch pipeline (core/prefetch.py) instead of the traced
-    in-program generator — the path a real on-disk dataset takes.
+    in-program generator — the path a real on-disk dataset takes. In
+    host-feed mode the solve shards over the mesh (one virtual slot per
+    device by default; ``slots`` to pin more for elastic resume) and,
+    with ``cfg.checkpoint_every`` and a ``checkpoint_dir``, survives
+    preemption: relaunch with ``resume=True`` and the same directory.
     """
     t0 = time.time()
     if host_feed:
         src = sparse_host_chunk_source(
             seed, workload.n_users, workload.k, chunk, q=workload.q,
             tightness=workload.tightness)
-        res = solve_streaming_host(src, cfg, q=workload.q,
-                                   double_buffer=double_buffer)
+        if mesh is None and cfg.stream_finalize != "legacy":
+            # The legacy three-pass finalize lives on the single-device
+            # driver only (its benchmark-baseline role); every other
+            # host-fed solve shards over the visible devices.
+            mesh = _mesh()
+        res = solve_streaming_host(
+            src, cfg, q=workload.q, double_buffer=double_buffer, mesh=mesh,
+            slots=slots, checkpoint_dir=checkpoint_dir,
+            resume_from=checkpoint_dir if resume else None)
     else:
         src = sparse_chunk_source(seed, workload.n_users, workload.k, chunk,
                                   q=workload.q, tightness=workload.tightness)
@@ -153,6 +173,23 @@ def main():
     ap.add_argument("--no-double-buffer", action="store_true",
                     help="host-feed only: synchronous device_put (the "
                          "naive baseline the bench compares against)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="host-feed only: directory for the atomic "
+                         "preemption-safe resume state (DESIGN.md §7)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="write the resume state every N iterations "
+                         "(and every N chunk columns inside the fused "
+                         "finalize pass); 0 disables")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint from "
+                         "--checkpoint-dir before solving (fresh start "
+                         "when the directory has none, so a relaunch "
+                         "loop can always pass --resume)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="host-feed only: virtual shard count (default: "
+                         "one per device); fixed at first launch so a "
+                         "checkpoint can resume on any mesh whose device "
+                         "count divides it")
     args = ap.parse_args()
 
     wl = WORKLOADS[args.workload]
@@ -163,13 +200,25 @@ def main():
                        presolve_samples=args.presolve,
                        use_kernels=args.use_kernels,
                        stream_finalize=args.stream_finalize,
+                       checkpoint_every=args.checkpoint_every,
                        chunk_size=None if args.streaming else args.chunk_size)
+    if ((args.checkpoint_every or args.checkpoint_dir or args.resume
+         or args.slots) and not args.host_feed):
+        raise SystemExit("--checkpoint-every/--checkpoint-dir/--resume/"
+                         "--slots require --host-feed (only the host-fed "
+                         "epoch driver is preemption-safe and slot-sharded)")
+    if args.checkpoint_every and not args.checkpoint_dir:
+        raise SystemExit("--checkpoint-every requires --checkpoint-dir")
+    if args.resume and not args.checkpoint_dir:
+        raise SystemExit("--resume requires --checkpoint-dir")
     if args.streaming or args.host_feed:
         if not args.chunk_size:
             raise SystemExit("--streaming/--host-feed require --chunk-size")
         out = run_streaming(wl, cfg, args.chunk_size,
                             host_feed=args.host_feed,
-                            double_buffer=not args.no_double_buffer)
+                            double_buffer=not args.no_double_buffer,
+                            checkpoint_dir=args.checkpoint_dir,
+                            resume=args.resume, slots=args.slots)
     else:
         out = run(wl, cfg)
     for k, v in out.items():

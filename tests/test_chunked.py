@@ -482,15 +482,37 @@ def test_memmap_source_streams_from_disk(tmp_path):
                                       np.asarray(getattr(ref, f)), err_msg=f)
 
 
-def test_host_streaming_rejects_cyclic_and_history():
+def test_host_streaming_rejects_cyclic_and_unsampled_history():
     kp, q = sparse_instance(shard_key(4), n=64, k=4, q=1, tightness=0.4)
     src = host_array_source(np.asarray(kp.p), np.asarray(kp.b),
                             np.asarray(kp.budgets), 16)
     with pytest.raises(ValueError, match="cyclic"):
         solve_streaming_host(src, SolverConfig(cd_mode="cyclic"), q=q)
+    # Unsampled history would re-scan the source every iteration: same
+    # rejection as the traced driver. Sampled history works (below).
     with pytest.raises(ValueError, match="record_history"):
-        solve_streaming_host(src, SolverConfig(record_history=True,
-                                               metrics_every=2), q=q)
+        solve_streaming_host(src, SolverConfig(record_history=True), q=q)
+
+
+def test_host_streaming_metrics_every_matches_traced_bitwise():
+    """Host-fed sampled history == the traced solve_streaming history at
+    the same cfg.metrics_every, bitwise: live sampled rows, NaN rows and
+    the frozen converged tail (ROADMAP leftover, ported in PR 4)."""
+    kp, q = sparse_instance(shard_key(4), n=1021, k=10, q=2, tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=20,
+                       record_history=True, metrics_every=3)
+    dev = solve_streaming(array_source(kp, 256), cfg, q=q)
+    host = solve_streaming_host(
+        host_array_source(np.asarray(kp.p), np.asarray(kp.b),
+                          np.asarray(kp.budgets), 256), cfg, q=q)
+    for f in ["lam", "iters", "r", "primal", "dual", "tau"]:
+        np.testing.assert_array_equal(np.asarray(getattr(host, f)),
+                                      np.asarray(getattr(dev, f)), err_msg=f)
+    assert sorted(host.history) == sorted(dev.history)
+    for key in dev.history:
+        a, b = np.asarray(host.history[key]), np.asarray(dev.history[key])
+        assert a.shape == b.shape, key
+        np.testing.assert_array_equal(a, b, err_msg=key)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,195 @@
+"""Property tests for the §5.4 projection arithmetic (postprocess.py).
+
+Two families, each with a deterministic smoke twin (always runs) and a
+hypothesis-driven sweep (skipped only when hypothesis is missing AND the
+``REQUIRE_HYPOTHESIS`` anti-skip gate is off — CI sets it):
+
+* ``threshold_and_removed``: the prefix-subtraction projection against
+  two independent oracles — a NumPy reimplementation of the f32
+  histogram/threshold decision (exact match required: same tie
+  convention, same edge choice, same fallback) and a float64 brute-force
+  row-sum removal oracle (tolerance match on the removed masses; the f32
+  histogram groups additions differently). Includes the tau = +inf
+  overflow fallback: mass above the ladder still yields a feasible —
+  remove-everything — projection.
+* ``profit_edges_fixed``: strictly monotone edges, and every
+  representable positive f32 profit (subnormals through inf) bins to a
+  valid bucket of the default ladder under the repo-wide
+  searchsorted-left convention.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.postprocess import (
+    profit_edges_fixed,
+    removable_hist,
+    threshold_and_removed,
+)
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# Check bodies (plain functions of concrete inputs).
+# ---------------------------------------------------------------------------
+
+def _random_case(seed, n, k, tight, overflow_frac):
+    """A random removal instance: nonneg group profits/consumption/gains,
+    budgets scaled to ``tight`` of total consumption, ``overflow_frac``
+    of the rows pushed above the ladder's top edge."""
+    rng = np.random.default_rng(seed)
+    pt = rng.uniform(1e-7, 10.0, n).astype(np.float32)
+    over = rng.random(n) < overflow_frac
+    pt = np.where(over, pt * np.float32(1e7), pt).astype(np.float32)
+    cons = rng.uniform(0.0, 1.0, (n, k)).astype(np.float32)
+    gain = rng.uniform(0.0, 1.0, n).astype(np.float32)
+    budgets = (np.maximum(cons.sum(0, dtype=np.float64), 1e-3)
+               * tight).astype(np.float32)
+    return pt, cons, gain, budgets
+
+
+def check_threshold_and_removed(pt, cons, gain, budgets, n_edges=64):
+    """Assert the projection contract on one concrete instance."""
+    edges = profit_edges_fixed(n_edges)
+    e_np = np.asarray(edges)
+    ch = removable_hist(jnp.asarray(pt), jnp.asarray(cons), edges)
+    gh = removable_hist(jnp.asarray(pt), jnp.asarray(gain)[:, None], edges)[0]
+    r_total = jnp.sum(jnp.asarray(cons), axis=0)
+    tau, rc, rg = threshold_and_removed(ch, gh, edges, r_total,
+                                        jnp.asarray(budgets))
+    tau = float(tau)
+    rc, rg = np.asarray(rc), np.asarray(rg)
+    r_np = np.asarray(r_total)
+
+    # Independent NumPy reimplementation of the decision: histogram by
+    # searchsorted-left with a row-order scatter (np.add.at == the XLA
+    # scatter's duplicate-index order: exact match required), then f64
+    # prefix sums for the minimal feasible edge. The in-function prefix
+    # is an f32 XLA scan whose association differs from a sequential
+    # cumsum, so edge choices are only asserted when every deciding
+    # comparison clears an ambiguity band wider than that rounding.
+    idx = np.searchsorted(e_np, pt, side="left")
+    hist = np.zeros((cons.shape[1], n_edges + 1), np.float32)
+    for kk in range(cons.shape[1]):
+        np.add.at(hist[kk], idx, cons[:, kk])
+    np.testing.assert_array_equal(np.asarray(ch), hist)
+    excess = np.maximum(r_np - budgets, 0.0).astype(np.float32)
+    ccum = np.cumsum(hist, axis=-1, dtype=np.float64)
+    feas = np.all(ccum[:, :n_edges] >= excess[:, None].astype(np.float64),
+                  axis=0)
+    band = 1e-4 * (1.0 + np.abs(excess))[:, None].astype(np.float64)
+    unambiguous = not np.any(
+        np.abs(ccum[:, :n_edges] - excess[:, None]) < band)
+    if not excess.any():
+        assert tau == -np.inf and not rc.any() and rg == 0.0
+        return
+    if feas.any():
+        e_star = int(np.argmax(feas))
+        if unambiguous:
+            assert tau == e_np[e_star], (tau, e_np[e_star])
+        removed = pt <= tau if np.isfinite(tau) else np.ones_like(pt, bool)
+    else:
+        if unambiguous:
+            assert tau == np.inf                  # overflow fallback
+        removed = (np.ones_like(pt, bool) if tau == np.inf
+                   else pt <= tau)
+    # Removal restores feasibility exactly in f32.
+    assert np.all(r_np - rc <= budgets)
+    # float64 brute-force row-sum oracle for the removed masses — over
+    # the set the function's own tau selects, so it holds through
+    # near-tie edge choices too (the f32 histogram prefix groups the
+    # additions differently: tolerance).
+    oracle_c = cons[removed].sum(0, dtype=np.float64)
+    oracle_g = gain[removed].sum(dtype=np.float64)
+    scale_c = max(float(cons.sum(dtype=np.float64)), 1.0)
+    np.testing.assert_allclose(rc, oracle_c, rtol=1e-4,
+                               atol=1e-5 * scale_c)
+    np.testing.assert_allclose(rg, oracle_g, rtol=1e-4,
+                               atol=1e-5 * max(oracle_g, 1.0))
+    # Minimality: one edge earlier does not cover the excess.
+    if unambiguous and feas.any() and e_star > 0:
+        assert not np.all(ccum[:, e_star - 1] >= excess)
+
+
+def check_profit_edges_bins_everything(values, n_edges=512, lo=1e-6, hi=1e6):
+    edges = np.asarray(profit_edges_fixed(n_edges, lo, hi))
+    assert edges.shape == (n_edges,)
+    assert np.all(np.diff(edges) > 0), "edges must be strictly monotone"
+    assert edges[0] == np.float32(lo) and edges[-1] == np.float32(hi)
+    idx = np.searchsorted(edges, np.asarray(values, np.float32), side="left")
+    assert np.all((idx >= 0) & (idx <= n_edges))
+    # Below-ladder mass shares bucket 0; above-ladder mass lands in the
+    # overflow bucket the tau = +inf fallback can still remove.
+    assert np.all(idx[np.asarray(values, np.float32) <= lo] == 0)
+    assert np.all(idx[np.asarray(values, np.float32) > hi] == n_edges)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic twins: always run, also on hypothesis-less images.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,tight,overflow", [
+    (0, 0.5, 0.0),      # ordinary removal
+    (1, 0.95, 0.0),     # barely infeasible
+    (2, 2.0, 0.0),      # already feasible: tau = -inf
+    (3, 0.5, 0.3),      # some groups above the ladder
+    (4, 1e-6, 1.0),     # everything above the ladder: tau = +inf fallback
+    (5, 0.01, 0.5),     # huge excess, mixed
+])
+def test_threshold_and_removed_cases(seed, tight, overflow):
+    pt, cons, gain, budgets = _random_case(seed, 300, 5, tight, overflow)
+    check_threshold_and_removed(pt, cons, gain, budgets)
+
+
+def test_threshold_overflow_fallback_removes_everything():
+    """All mass above the ladder and budgets ~0: no edge prefix covers
+    the excess, tau = +inf, and the prefix subtraction empties the
+    solution — feasible by construction."""
+    pt, cons, gain, budgets = _random_case(7, 100, 4, 1e-6, 1.0)
+    edges = profit_edges_fixed(64)
+    ch = removable_hist(jnp.asarray(pt), jnp.asarray(cons), edges)
+    gh = removable_hist(jnp.asarray(pt), jnp.asarray(gain)[:, None], edges)[0]
+    r = jnp.sum(jnp.asarray(cons), axis=0)
+    tau, rc, rg = threshold_and_removed(ch, gh, edges, r,
+                                        jnp.asarray(budgets))
+    assert float(tau) == np.inf
+    np.testing.assert_allclose(np.asarray(rc), np.asarray(r), rtol=1e-6)
+    assert np.all(np.asarray(r) - np.asarray(rc) <= budgets)
+
+
+def test_profit_edges_fixed_bins_representative_floats():
+    vals = np.array([np.finfo(np.float32).tiny, 1e-38, 1e-7, 1e-6,
+                     1.0000001e-6, 3.14, 1e6, 1.0000001e6, 1e30,
+                     np.finfo(np.float32).max, np.inf], np.float32)
+    check_profit_edges_bins_everything(vals)
+    check_profit_edges_bins_everything(vals, n_edges=2, lo=0.5, hi=2.0)
+    check_profit_edges_bins_everything(vals, n_edges=1024, lo=1e-3, hi=1e3)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps (CI: REQUIRE_HYPOTHESIS makes absence a failure).
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 400), st.integers(1, 8),
+       st.floats(1e-6, 4.0), st.sampled_from([0.0, 0.1, 0.5, 1.0]))
+@settings(max_examples=80, deadline=None)
+def test_threshold_and_removed_property(seed, n, k, tight, overflow):
+    pt, cons, gain, budgets = _random_case(seed, n, k, tight, overflow)
+    check_threshold_and_removed(pt, cons, gain, budgets)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 1024))
+@settings(max_examples=60, deadline=None)
+def test_profit_edges_fixed_property(seed, n_edges):
+    rng = np.random.default_rng(seed)
+    # log-uniform across the full positive f32 range, plus exact edges
+    vals = np.exp(rng.uniform(np.log(1e-38), np.log(3e38), 200)
+                  ).astype(np.float32)
+    edges = np.asarray(profit_edges_fixed(n_edges))
+    vals = np.concatenate([vals, edges, [np.inf]]).astype(np.float32)
+    check_profit_edges_bins_everything(vals, n_edges=n_edges)

@@ -69,6 +69,8 @@ def _missing_docstrings(tree, path) -> list:
             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
                               ast.ClassDef))]
     for cls in [n for n in defs if isinstance(n, ast.ClassDef)]:
+        if cls.name.startswith("_"):
+            continue        # a private class's methods are not API
         defs.extend(n for n in cls.body
                     if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)))
     for node in defs:

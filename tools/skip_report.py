@@ -1,0 +1,81 @@
+"""Skipped-test report + anti-skip gate for the tier-1 CI job.
+
+``python tools/skip_report.py PYTEST_JUNIT_XML [--fail-on PATTERN]``
+
+Parses a pytest ``--junitxml`` report and prints a GitHub-flavoured
+markdown summary (append it to ``$GITHUB_STEP_SUMMARY``): total /
+passed / failed / skipped counts and one line per skipped test with its
+reason. Exit status 1 when any skip reason matches ``--fail-on``
+(default: ``hypothesis``) — the anti-skip gate: the property suites
+must *run* in CI, and the ``_hypothesis_compat`` shim silently
+downgrading them to skips (hypothesis missing from the image) has to
+fail the job loudly, not render as green.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+import xml.etree.ElementTree as ET
+
+
+def collect(xml_path):
+    """Return (counts dict, [(test id, skip reason), ...])."""
+    root = ET.parse(xml_path).getroot()
+    suites = root.iter("testsuite")
+    total = failed = errors = skipped = 0
+    skips = []
+    for suite in suites:
+        total += int(suite.get("tests", 0))
+        failed += int(suite.get("failures", 0))
+        errors += int(suite.get("errors", 0))
+        skipped += int(suite.get("skipped", 0))
+        for case in suite.iter("testcase"):
+            sk = case.find("skipped")
+            if sk is not None:
+                test_id = f"{case.get('classname')}::{case.get('name')}"
+                skips.append((test_id, sk.get("message") or ""))
+    passed = total - failed - errors - skipped
+    return ({"total": total, "passed": passed, "failed": failed + errors,
+             "skipped": skipped}, skips)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("junit_xml")
+    ap.add_argument("--fail-on", default="hypothesis",
+                    help="regex; a skip reason matching it fails the gate "
+                         "(empty string disables)")
+    args = ap.parse_args()
+    counts, skips = collect(pathlib.Path(args.junit_xml))
+
+    print("### Tier-1 test summary")
+    print()
+    print("| total | passed | failed | skipped |")
+    print("|---|---|---|---|")
+    print(f"| {counts['total']} | {counts['passed']} "
+          f"| {counts['failed']} | {counts['skipped']} |")
+    if skips:
+        print()
+        print("<details><summary>Skipped tests</summary>")
+        print()
+        for test_id, reason in skips:
+            print(f"- `{test_id}` — {reason}")
+        print()
+        print("</details>")
+
+    if args.fail_on:
+        gated = [(t, r) for t, r in skips
+                 if re.search(args.fail_on, r, re.IGNORECASE)]
+        if gated:
+            print()
+            print(f"**ANTI-SKIP GATE**: {len(gated)} test(s) skipped for a "
+                  f"reason matching {args.fail_on!r} — these must run in CI.")
+            for t, r in gated:
+                print(f"  GATED SKIP: {t} — {r}", file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
