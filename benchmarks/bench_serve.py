@@ -1,0 +1,105 @@
+"""Serving refresh bench: warm-vs-cold accounting + lookup latency.
+
+``PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--out PATH]``
+
+The paper's deployment story (§6, "called on a daily basis") in
+numbers, via the generation engine (repro/serve/): a multi-day scenario
+of deterministic budget perturbations where every generation is solved
+twice — warm-started from the previous generation's multipliers (the
+engine's path) and cold from all-ones (the reference) — plus on-demand
+lookup throughput through the DecisionService chunk cache.
+
+What the report claims, and how it is gated:
+
+* **Warm iteration counts are the hardware-independent number**: the
+  solve is deterministic for a pinned virtual-slot count (the bench
+  pins ``slots=8`` on whatever device count is present — the host-fed
+  driver is bitwise mesh-size-invariant), so the per-generation
+  warm/cold iteration table reproduces everywhere. The bench itself
+  exits 1 unless warm beats cold in *total* iterations over the
+  scenario and every lookup round-trips bitwise against
+  ``decisions_chunk`` materialisation; ``tools/bench_diff.py`` then
+  gates the committed cold/warm ratio against CI's measurement.
+* **Lookup QPS is recorded, not gated** — wall clock on shared CPU is
+  noisy; the cache hit-rate accounting next to it is deterministic.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+
+from repro.core import SolverConfig  # noqa: E402
+from repro.launch.refresh import run_scenario  # noqa: E402
+from repro.serve import WorkloadSpec  # noqa: E402
+
+K, Q, SLOTS = 8, 2, 8
+# (n, chunk, generations): the smoke point is shared with CI so
+# bench_diff can match points by n against the committed report.
+GRID = [(16384, 1024, 4), (65536, 4096, 6)]
+SMOKE_GRID = [(16384, 1024, 4)]
+
+
+def bench_point(n, chunk, generations, seed=0, max_iters=60):
+    spec = WorkloadSpec(seed=seed, n=n, k=K, chunk=chunk, q=Q,
+                        tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=max_iters,
+                       checkpoint_every=0)
+    with tempfile.TemporaryDirectory(prefix="bench_serve_") as root:
+        out = run_scenario(spec, generations, root, cfg, mesh=None,
+                           slots=SLOTS, lookups=512, verify=True)
+    return {
+        "n": n, "chunk": chunk, "generations": generations,
+        "k": K, "q": Q, "slots": SLOTS,
+        "per_generation": out["per_generation"],
+        "warm_iters_total": out["warm_iters_total"],
+        "cold_iters_total": out["cold_iters_total"],
+        "cold_over_warm": out["cold_over_warm"],
+        "lookup": out["lookup"],
+        "lookups_bitwise": out["lookups_bitwise"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small point (CI-friendly)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    points = []
+    print("n,generations,warm_total,cold_total,cold/warm,batched_qps")
+    for n, chunk, generations in (SMOKE_GRID if args.smoke else GRID):
+        p = bench_point(n, chunk, generations)
+        points.append(p)
+        print(f"{n},{generations},{p['warm_iters_total']},"
+              f"{p['cold_iters_total']},{p['cold_over_warm']},"
+              f"{p['lookup']['batched_qps']}")
+
+    report = {
+        "bench": "serve",
+        "backend": jax.default_backend(),
+        "points": points,
+    }
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+    bad = [p["n"] for p in points
+           if p["warm_iters_total"] >= p["cold_iters_total"]
+           or not p["lookups_bitwise"]]
+    if bad:
+        print(f"REGRESSION: warm did not beat cold (or lookup mismatch) "
+              f"at n={bad}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

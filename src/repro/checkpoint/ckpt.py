@@ -15,6 +15,18 @@ Layout (one directory per step):
   are re-placed with ``jax.device_put`` against the *current* mesh, which
   may have a different size/topology than the one that saved (scale-up or
   degraded scale-down after node loss).
+* Corruption is loud: a step directory whose manifest exists but cannot be
+  parsed, or whose manifest names a leaf file that is missing or
+  unreadable, raises an actionable ``ValueError`` naming the offending
+  path — never a silent fresh start. (The atomic rename makes such states
+  impossible under this writer; seeing one means external damage, which
+  must not be mistaken for "no checkpoint".) Only stray ``.tmp``
+  directories — the expected residue of a killed save — are skipped.
+* Pointer flips: ``write_json`` / ``read_json`` are the small atomic
+  documents higher layers publish through — e.g. the serving refresh
+  engine's live-generation pointer (repro/serve/engine.py), flipped with
+  the same ``os.replace`` so a reader never observes a half-published
+  generation.
 
 For the container-scale tests this host-gathers leaves (np.save). On a
 real pod the same layout is written per-host with process-local shards;
@@ -67,7 +79,55 @@ def save(directory, step: int, tree) -> str:
     return str(final)
 
 
+def _read_manifest(step_dir: pathlib.Path) -> dict:
+    """Parse a step directory's manifest, failing actionably on damage."""
+    mpath = step_dir / "manifest.json"
+    if not mpath.exists():
+        raise ValueError(
+            f"checkpoint step directory {step_dir} has no manifest.json — "
+            "it is not a checkpoint this layer wrote (the atomic rename "
+            "publishes the manifest with the step); remove the directory "
+            "if it is debris")
+    try:
+        with open(mpath) as f:
+            return json.load(f)
+    except json.JSONDecodeError as e:
+        raise ValueError(
+            f"checkpoint manifest {mpath} is corrupt (truncated or "
+            f"overwritten: {e}); the atomic save protocol cannot produce "
+            "this state, so the directory was damaged after the fact — "
+            f"delete {step_dir} to discard the step (an older step, if "
+            "any, will be restored instead)") from e
+
+
+def _load_leaf(step_dir: pathlib.Path, meta: dict) -> np.ndarray:
+    """Load one manifest-named leaf array, failing actionably on damage."""
+    fpath = step_dir / meta["file"]
+    if not fpath.exists():
+        raise ValueError(
+            f"checkpoint {step_dir} is missing leaf file {meta['file']} "
+            f"(tree path {meta['path']}, shape {meta['shape']}): the "
+            f"manifest exists but the step is incomplete — delete "
+            f"{step_dir} to discard it")
+    try:
+        return np.load(fpath)
+    except Exception as e:
+        raise ValueError(
+            f"checkpoint leaf {fpath} (tree path {meta['path']}) is "
+            f"unreadable: {e} — delete {step_dir} to discard the "
+            "corrupt step") from e
+
+
 def latest_step(directory):
+    """Newest complete step in ``directory``; None when there is none.
+
+    A step counts as soon as its ``manifest.json`` EXISTS — parseability
+    is restore's concern, and a damaged-but-present manifest must surface
+    as restore's actionable error, not be silently skipped here (a resume
+    loop that fell back to "no checkpoint" would quietly discard the run).
+    ``.tmp`` directories (killed saves) and directories without a
+    manifest are not steps and are ignored.
+    """
     d = pathlib.Path(directory)
     if not d.exists():
         return None
@@ -84,8 +144,7 @@ def restore(directory, step: int, like, sharding_tree=None):
     ShapeDtypeStructs). ``sharding_tree``: optional matching pytree of
     shardings for elastic re-placement on the current mesh."""
     d = pathlib.Path(directory) / f"step_{step:08d}"
-    with open(d / "manifest.json") as f:
-        manifest = json.load(f)
+    manifest = _read_manifest(d)
     flat_like, treedef = _leaves_with_paths(like)
     assert len(flat_like) == len(manifest["leaves"]), (
         len(flat_like), len(manifest["leaves"]))
@@ -97,7 +156,7 @@ def restore(directory, step: int, like, sharding_tree=None):
     for i, ((path, leaf), meta) in enumerate(zip(flat_like, manifest["leaves"])):
         got = jax.tree_util.keystr(path)
         assert got == meta["path"], f"tree mismatch: {got} vs {meta['path']}"
-        arr = np.load(d / meta["file"])
+        arr = _load_leaf(d, meta)
         assert list(arr.shape) == list(leaf.shape), (got, arr.shape, leaf.shape)
         if shard_flat is not None and shard_flat[i] is not None:
             out.append(jax.device_put(arr, shard_flat[i]))
@@ -125,19 +184,58 @@ def restore_auto(directory, step: int, sharding_tree=None):
     the default device).
     """
     d = pathlib.Path(directory) / f"step_{step:08d}"
-    with open(d / "manifest.json") as f:
-        manifest = json.load(f)
+    manifest = _read_manifest(d)
     out = {}
     for meta in manifest["leaves"]:
         keys = _KEY_RE.findall(meta["path"])
         assert len(keys) == 1 and f"['{keys[0]}']" == meta["path"], (
             f"restore_auto supports flat dict checkpoints only, "
             f"got leaf path {meta['path']!r}")
-        arr = np.load(d / meta["file"])
+        arr = _load_leaf(d, meta)
         sh = (sharding_tree or {}).get(keys[0])
         out[keys[0]] = jax.device_put(arr, sh) if sh is not None \
             else jax.device_put(arr)
     return out
+
+
+def write_json(directory, name: str, payload: dict) -> str:
+    """Atomically publish a small JSON document at ``<directory>/<name>``.
+
+    The pointer-flip primitive of the generation-based serving layer
+    (repro/serve/engine.py): the document is written to ``<name>.tmp``
+    and renamed into place with ``os.replace``, so a concurrent or
+    subsequent :func:`read_json` sees either the previous complete
+    document or the new complete document — never a torn write. Returns
+    the final path.
+    """
+    d = pathlib.Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    tmp = d / f"{name}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    final = d / name
+    os.replace(tmp, final)
+    return str(final)
+
+
+def read_json(directory, name: str):
+    """Read a :func:`write_json` document; None when it was never written.
+
+    A *present but unparseable* document raises an actionable
+    ``ValueError`` (the atomic flip cannot produce one, so it means
+    external damage) — the same no-silent-fresh-start contract as
+    :func:`latest_step` / :func:`restore_auto`.
+    """
+    path = pathlib.Path(directory) / name
+    if not path.exists():
+        return None
+    try:
+        return json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        raise ValueError(
+            f"pointer document {path} is corrupt ({e}); write_json flips "
+            "it atomically, so this state means external damage — delete "
+            "the file to discard the pointer") from e
 
 
 def prune(directory, keep: int = 3):

@@ -35,6 +35,7 @@ from .chunked import (  # noqa: F401
     StreamResult,
     array_source,
     decisions_chunk,
+    decisions_rows,
     solve_streaming,
 )
 from .prefetch import (  # noqa: F401
@@ -42,6 +43,7 @@ from .prefetch import (  # noqa: F401
     host_array_source,
     memmap_source,
     solve_streaming_host,
+    source_fingerprint,
 )
 from .instances import dense_instance, shard_key, sparse_instance  # noqa: F401
 from .moe_router import RouterOut, scd_route, topk_route  # noqa: F401

@@ -96,7 +96,8 @@ from .sparse_scd import select_sparse
 from .types import SolverConfig, SparseKP
 
 __all__ = ["HostChunkSource", "host_array_source", "memmap_source",
-           "callable_source", "sharded_source", "solve_streaming_host"]
+           "callable_source", "sharded_source", "solve_streaming_host",
+           "source_fingerprint"]
 
 # Resume-state phases (the "epoch cursor" of the checkpoint): the solve
 # is either still iterating multipliers or inside the finalize pass.
@@ -350,13 +351,31 @@ def _fingerprint(source, cfg, q, lam_init):
     return np.frombuffer(h.digest()[:8], np.uint8).copy()
 
 
+def source_fingerprint(source: HostChunkSource, cfg: SolverConfig, q: int,
+                       lam0=None) -> np.ndarray:
+    """Public identity hash of one (source, cfg, q, lam0) solve — (8,) uint8.
+
+    Exactly the fingerprint ``solve_streaming_host`` stores in its resume
+    state and refuses to resume across, exposed so higher layers can
+    stamp *published* artifacts with the same identity: the serving
+    refresh engine (:mod:`repro.serve.engine`) records it in every
+    generation, which lets a decision service verify it is answering
+    lookups against the workload the generation was actually solved on.
+    ``lam0`` defaults to the all-ones cold start like the solver.
+    """
+    lam0 = (np.ones((source.k,), np.float32) if lam0 is None
+            else np.asarray(lam0, np.float32))
+    return _fingerprint(source, cfg, q, lam0)
+
+
 def _save_state(directory, step, phase, iters, cursor, slots, fp, lam,
-                dprev, fin):
+                dprev, fin, keep=3):
     """Write one StreamCheckpointState atomically; prune old steps.
 
     ``fin`` is the per-slot fused-finalize partial tuple (leading axis =
     slots; 5 or 7 leaves) — zeros while still iterating. Everything is
-    host-gathered NumPy, constant size in n.
+    host-gathered NumPy, constant size in n. ``keep`` is the retention
+    passed through to ``ckpt.prune`` (``cfg.checkpoint_keep``).
     """
     state = {
         "phase": np.int32(phase),
@@ -370,7 +389,7 @@ def _save_state(directory, step, phase, iters, cursor, slots, fp, lam,
     for name, arr in zip(_FIN_KEYS, fin):
         state[name] = np.asarray(arr)
     ckpt.save(directory, step, state)
-    ckpt.prune(directory, keep=3)
+    ckpt.prune(directory, keep=keep)
 
 
 def _load_state(resume_from, mesh, axes):
@@ -923,6 +942,11 @@ def solve_streaming_host(source: HostChunkSource,
     if checkpoint_dir is None:
         checkpoint_dir = resume_from
     checkpointing = ckpt_every > 0 and checkpoint_dir is not None
+    if checkpointing and cfg.checkpoint_keep < 1:
+        raise ValueError(
+            f"checkpoint_keep must be >= 1 (got {cfg.checkpoint_keep}): "
+            "retaining zero resume states would leave nothing to resume "
+            "from")
     if (checkpointing or resume_from is not None) and cfg.record_history:
         raise ValueError(
             "record_history is an analysis mode and cannot be combined "
@@ -1009,13 +1033,15 @@ def solve_streaming_host(source: HostChunkSource,
             if (checkpointing and iters % ckpt_every == 0
                     and iters < cfg.max_iters):
                 _save_state(checkpoint_dir, iters, _PHASE_ITER, iters, 0,
-                            S, fp, lam, dprev, fin_zeros())
+                            S, fp, lam, dprev, fin_zeros(),
+                            keep=cfg.checkpoint_keep)
         phase, cursor = _PHASE_FIN, 0
         if checkpointing:
             # Finalize-entry state: without it, a kill during the
             # finalize would force replaying multiplier iterations.
             _save_state(checkpoint_dir, cfg.max_iters + 1, _PHASE_FIN,
-                        iters, 0, S, fp, lam, dprev, fin_zeros())
+                        iters, 0, S, fp, lam, dprev, fin_zeros(),
+                        keep=cfg.checkpoint_keep)
 
     history = None
     if rows is not None:
@@ -1037,7 +1063,7 @@ def solve_streaming_host(source: HostChunkSource,
             if done % ckpt_every == 0 and done < rt.fin_cols:
                 _save_state(checkpoint_dir, cfg.max_iters + 1 + done,
                             _PHASE_FIN, iters, done, S, fp, lam, dprev,
-                            rt.fin_to_np(state))
+                            rt.fin_to_np(state), keep=cfg.checkpoint_keep)
 
     carry = rt.fin_init() if fin_carry is None else fin_carry
     carry = rt.fin_run(carry, lam, cursor, on_col)

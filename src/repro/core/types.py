@@ -124,6 +124,12 @@ class SolverConfig:
     # bitwise from `solve_streaming_host(resume_from=...)`. 0 disables.
     # Requires a checkpoint_dir at the call site; see DESIGN.md §7.
     checkpoint_every: int = 0
+    # Streaming checkpoint retention: how many resume states ckpt.prune
+    # keeps in the checkpoint directory (must be >= 1 — pruning every
+    # step would leave nothing to resume from). Excluded from the
+    # resume-state fingerprint like checkpoint_every: changing the
+    # retention across a restart is legitimate.
+    checkpoint_keep: int = 3
     # Streaming finalize strategy (core/chunked.py): "fused" folds the
     # final metrics, the §5.4 removable histograms and the projection
     # into ONE pass over the chunk source (iters + 1 total); "legacy"

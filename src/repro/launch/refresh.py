@@ -1,0 +1,204 @@
+"""Refresh launcher: the paper's daily production loop, end to end.
+
+Drives a multi-day scenario through :class:`repro.serve.RefreshEngine`:
+N generations of deterministic budget perturbations, each solved
+warm-started from the previous generation's multipliers and published
+with an atomic pointer flip, then on-demand lookups against the live
+generation through :class:`repro.serve.DecisionService`.
+
+Accounting printed per generation: the warm refresh's iteration count
+next to a cold reference solve of the *same* workload (the paper's
+daily-call argument in numbers — the warm path must win), then lookup
+QPS (batched and single-user) with the chunk-cache hit rate, and a
+roundtrip verification that sampled lookups are bitwise the rows full
+materialisation (``chunked.decisions_chunk``) would produce.
+
+Exit status 1 when the warm path fails to beat cold in total
+iterations or a lookup mismatches materialisation — this is the CI
+serving smoke gate (``--smoke``), which on the CI image runs over 8
+virtual devices (sharded host feeding, slots == devices).
+
+    PYTHONPATH=src python -m repro.launch.refresh --smoke
+    PYTHONPATH=src python -m repro.launch.refresh --users 1000000 \
+        --generations 7 --root /tmp/refresh
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SolverConfig, SparseKP
+from repro.core.chunked import array_source, decisions_chunk
+from repro.core.prefetch import solve_streaming_host
+from repro.serve import RefreshEngine, WorkloadSpec
+
+
+def _budget_schedule(generations: int, seed: int):
+    """Deterministic daily budget scales: ±15% around the base budgets."""
+    rng = np.random.default_rng(seed + 1000)
+    return [1.0] + [round(float(s), 4)
+                    for s in 1.0 + rng.uniform(-0.15, 0.15, generations - 1)]
+
+
+def _cold_iters(engine: RefreshEngine, spec: WorkloadSpec) -> int:
+    """Iteration count of a cold reference solve of the same workload."""
+    res = solve_streaming_host(
+        engine.make_source(spec),
+        engine.cfg.replace(checkpoint_every=0), q=spec.q,
+        mesh=engine.mesh, slots=engine.slots)
+    return int(res.iters)
+
+
+def _verify_lookups(engine: RefreshEngine, svc, users) -> bool:
+    """Sampled lookups vs full decisions_chunk materialisation, bitwise."""
+    gen = svc.generation
+    src = engine.make_source(gen.spec)
+    c = -(-src.n // src.chunk)
+    p = np.concatenate([src.fn(i)[0] for i in range(c)])[:src.n]
+    b = np.concatenate([src.fn(i)[1] for i in range(c)])[:src.n]
+    kp = SparseKP(p=jnp.asarray(p), b=jnp.asarray(b),
+                  budgets=jnp.asarray(src.budgets))
+    asrc = array_source(kp, src.chunk)
+    got = svc.decide_batch(users)
+    ok = True
+    for ci in np.unique(np.asarray(users) // src.chunk):
+        x, _ = decisions_chunk(asrc, gen.lam, gen.spec.q, int(ci),
+                               tau=gen.tau)
+        rows = np.asarray(users) // src.chunk == ci
+        want = np.asarray(x)[np.asarray(users)[rows] % src.chunk]
+        if not np.array_equal(got[rows], want):
+            ok = False
+            print(f"[refresh] LOOKUP MISMATCH in chunk {int(ci)}")
+    return ok
+
+
+def run_scenario(spec: WorkloadSpec, generations: int, root,
+                 cfg: SolverConfig, mesh=None, slots=None, lookups=512,
+                 verify=True, resume=False):
+    """The multi-day loop; returns the accounting dict the bench reuses."""
+    engine = RefreshEngine(root, spec, cfg=cfg, mesh=mesh, slots=slots)
+    if resume:
+        rec = engine.recover()
+        if rec is not None:
+            print(f"[refresh] recovered pending generation {rec.gen}")
+    scales = _budget_schedule(generations, spec.seed)
+    start = (engine.live_gen_id() + 1
+             if engine.live_gen_id() is not None else 0)
+    per_gen = []
+    for g in range(start, generations):
+        t0 = time.perf_counter()
+        gen = engine.refresh(budget_scale=scales[g])
+        wall = time.perf_counter() - t0
+        cold = gen.iters if g == 0 else _cold_iters(engine, gen.spec)
+        per_gen.append({"gen": g, "budget_scale": scales[g],
+                        "warm_iters": gen.iters, "cold_iters": cold,
+                        "wall_s": round(wall, 3)})
+        tag = "cold (first)" if g == 0 else f"cold would take {cold}"
+        print(f"[refresh] gen {g}: budgets {scales[g] - 1.0:+.2%} -> "
+              f"{gen.iters} iters warm ({tag}), primal "
+              f"{float(gen.primal):,.1f}, {wall:.2f}s")
+
+    warm_entries = [e for e in per_gen if e["gen"] > 0]
+    warm_total = sum(e["warm_iters"] for e in warm_entries)
+    cold_total = sum(e["cold_iters"] for e in warm_entries)
+    if warm_entries:
+        print(f"[refresh] totals over {len(warm_entries)} refreshes: "
+              f"warm {warm_total} vs cold {cold_total} iterations "
+              f"({cold_total / max(warm_total, 1):.2f}x)")
+    else:
+        # Single-generation scenario, or a --resume relaunch that found
+        # everything already published: nothing warm to account.
+        print("[refresh] no warm refreshes ran this invocation "
+              f"(live generation: {engine.live_gen_id()})")
+
+    svc = engine.decision_service()
+    rng = np.random.default_rng(spec.seed)
+    users = rng.integers(0, spec.n, lookups)
+    t0 = time.perf_counter()
+    svc.decide_batch(users)
+    batched_s = time.perf_counter() - t0
+    singles = users[:min(lookups, 128)]
+    t0 = time.perf_counter()
+    for u in singles:
+        svc.decide(int(u))
+    single_s = time.perf_counter() - t0
+    lookup = {
+        "users": int(lookups),
+        "batched_qps": round(lookups / max(batched_s, 1e-9), 1),
+        "single_qps": round(len(singles) / max(single_s, 1e-9), 1),
+        "cache": dict(svc.stats),
+    }
+    print(f"[refresh] lookups: {lookup['batched_qps']:.0f}/s batched, "
+          f"{lookup['single_qps']:.0f}/s single "
+          f"(cache {svc.stats['hits']} hits / {svc.stats['fills']} fills)")
+
+    ok = True
+    if verify:
+        ok = _verify_lookups(engine, svc, users[:256])
+        print(f"[refresh] lookup roundtrip vs materialisation: "
+              f"{'bitwise OK' if ok else 'MISMATCH'}")
+    return {"per_generation": per_gen, "warm_refreshes": len(warm_entries),
+            "warm_iters_total": warm_total,
+            "cold_iters_total": cold_total,
+            "cold_over_warm": round(cold_total / max(warm_total, 1), 3),
+            "lookup": lookup, "lookups_bitwise": ok}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--users", type=int, default=65536)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=2048)
+    ap.add_argument("--q", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--generations", type=int, default=5)
+    ap.add_argument("--tightness", type=float, default=0.4)
+    ap.add_argument("--root", default=None,
+                    help="generation root (default: a temp dir)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="virtual feed slots (default: device count)")
+    ap.add_argument("--max-iters", type=int, default=60)
+    ap.add_argument("--checkpoint-every", type=int, default=4)
+    ap.add_argument("--lookups", type=int, default=512)
+    ap.add_argument("--resume", action="store_true",
+                    help="finish a preempted refresh in --root first")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the O(n) lookup-roundtrip check")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scenario (CI gate; exits 1 on any failure)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.users, args.chunk, args.generations = 8192, 512, 3
+        args.lookups = 256
+    spec = WorkloadSpec(seed=args.seed, n=args.users, k=args.k,
+                        chunk=args.chunk, q=args.q,
+                        tightness=args.tightness)
+    cfg = SolverConfig(reduce="bucketed", max_iters=args.max_iters,
+                       checkpoint_every=args.checkpoint_every)
+    ndev = jax.device_count()
+    mesh = jax.make_mesh((ndev,), ("users",)) if ndev > 1 else None
+    root = args.root or tempfile.mkdtemp(prefix="refresh_")
+    print(f"[refresh] root {root}; {ndev} device(s)"
+          + (f", slots {args.slots or ndev}" if mesh else ""))
+    out = run_scenario(spec, args.generations, root, cfg, mesh=mesh,
+                       slots=args.slots, lookups=args.lookups,
+                       verify=not args.no_verify, resume=args.resume)
+    if out["warm_refreshes"] \
+            and out["warm_iters_total"] >= out["cold_iters_total"]:
+        print("[refresh] FAIL: warm refreshes did not beat cold "
+              f"({out['warm_iters_total']} >= {out['cold_iters_total']})")
+        sys.exit(1)
+    if not out["lookups_bitwise"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,13 @@ local cardinality cap (free batch slots) — solved exactly by the same
 cyclic-SCD code that prices experts in the MoE router. Admission therefore
 maximises scheduler value subject to memory, instead of FIFO.
 
+Successive ticks are the same KP under a drifting workload — exactly the
+refresh engine's daily-call shape (repro/serve/engine.py) at tick scale —
+so the loop warm-starts each tick's exact solve from the previous tick's
+multipliers (``lam0``): the KV price barely moves between ticks, the
+cyclic sweeps mostly confirm it, and the admitted sets are unchanged vs
+solving cold every tick (pinned by tests/test_serving.py).
+
 On this container it serves the reduced smoke config on one device; on a
 pod the same loop runs the pjit'd decode_step over the production mesh.
 """
@@ -15,6 +22,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +41,31 @@ class Request:
     done: int = 0
 
 
-def admission_solve(waiting, kv_budget, free_slots):
-    """Choose the admitted subset by solving the admission KP exactly."""
+class Admission(NamedTuple):
+    """One admission tick's outcome: who got in, at what KV price.
+
+    ``lam`` is the (1,) multiplier vector of the admission KP — the
+    KV-cache shadow price — handed back so the next tick can warm-start
+    from it; None when no solve ran (empty queue / no free slots).
+    ``iters`` is that solve's iteration count (0 when no solve ran):
+    the warm-vs-cold accounting the serving tests and bench read.
+    """
+
+    picked: list
+    lam: Optional[np.ndarray]
+    iters: int
+
+
+def admission_solve(waiting, kv_budget, free_slots, lam0=None) -> Admission:
+    """Choose the admitted subset by solving the admission KP exactly.
+
+    ``lam0`` warm-starts the exact cyclic-SCD solve from the previous
+    tick's multipliers (same ``lam0`` path the refresh engine uses for
+    daily generations); the admitted set must be the one the cold solve
+    picks — warm starting buys iterations, never different admissions.
+    """
     if not waiting or free_slots <= 0:
-        return []
+        return Admission([], None, 0)
     n = len(waiting)
     # value ~ completed-requests-per-token (shortest remaining first)
     p = np.asarray([1.0 + 1.0 / (1 + r.max_new - r.done) for r in waiting],
@@ -51,13 +80,23 @@ def admission_solve(waiting, kv_budget, free_slots):
         caps=sets.caps,
     )
     res = solve(kp, SolverConfig(reduce="exact", cd_mode="cyclic",
-                                 max_iters=12), q=0)
+                                 max_iters=12), q=0, lam0=lam0)
     mask = np.asarray(res.x)[0]
-    return [r.rid for r, m in zip(waiting, mask) if m]
+    return Admission([r.rid for r, m in zip(waiting, mask) if m],
+                     np.asarray(res.lam), int(res.iters))
 
 
 def serve_loop(cfg, n_requests=8, cache_len=256, kv_budget=512.0,
-               max_batch=4, seed=0, max_ticks=256):
+               max_batch=4, seed=0, max_ticks=256, warm=True):
+    """Continuous decode loop with KP admission each tick.
+
+    ``warm`` threads each admission solve's multipliers into the next
+    tick's ``lam0`` (the default); ``warm=False`` solves every tick
+    cold — kept so the tests can pin that the two admit identical sets.
+    Returns (completed requests, per-tick admitted sets, stats) where
+    stats carries the wall time and the per-tick admission iteration
+    counts the warm-vs-cold accounting reads.
+    """
     params = M.init(cfg, jax.random.PRNGKey(seed))
     dstep = jax.jit(M.make_decode_step(cfg), donate_argnums=(1,))
     rng = np.random.default_rng(seed)
@@ -71,6 +110,8 @@ def serve_loop(cfg, n_requests=8, cache_len=256, kv_budget=512.0,
     active: dict[int, Request] = {}
     done: list[Request] = []
     admitted_sets = []
+    admission_iters = []
+    lam = None
     t0 = time.time()
     for tick in range(max_ticks):
         if not queue and not active:
@@ -79,9 +120,13 @@ def serve_loop(cfg, n_requests=8, cache_len=256, kv_budget=512.0,
         if queue and free > 0:
             # budget shrinks by what the active set already holds
             held = sum(r.prompt_len + r.max_new for r in active.values())
-            picked = admission_solve(queue, kv_budget - held, free)
-            admitted_sets.append(picked)
-            for rid in picked[:free]:
+            adm = admission_solve(queue, kv_budget - held, free,
+                                  lam0=lam if warm else None)
+            if adm.lam is not None:
+                lam = adm.lam
+                admission_iters.append(adm.iters)
+            admitted_sets.append(adm.picked)
+            for rid in adm.picked[:free]:
                 req = next(r for r in queue if r.rid == rid)
                 queue.remove(req)
                 active[rid] = req
@@ -95,7 +140,10 @@ def serve_loop(cfg, n_requests=8, cache_len=256, kv_budget=512.0,
                 if r.done >= r.max_new:
                     done.append(r)
                     del active[rid]
-    return done, admitted_sets, time.time() - t0
+    stats = {"wall_s": time.time() - t0, "warm": warm,
+             "admission_iters": admission_iters,
+             "admission_iters_total": sum(admission_iters)}
+    return done, admitted_sets, stats
 
 
 def main():
@@ -108,10 +156,11 @@ def main():
     cfg = registry.get(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    done, admitted, dt = serve_loop(cfg, n_requests=args.requests,
-                                    max_batch=args.max_batch)
-    print(f"[serve] completed {len(done)} requests in {dt:.2f}s "
-          f"({len(admitted)} admission solves)")
+    done, admitted, stats = serve_loop(cfg, n_requests=args.requests,
+                                       max_batch=args.max_batch)
+    print(f"[serve] completed {len(done)} requests in "
+          f"{stats['wall_s']:.2f}s ({len(admitted)} admission solves, "
+          f"{stats['admission_iters_total']} warm KP iterations)")
 
 
 if __name__ == "__main__":

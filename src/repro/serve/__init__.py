@@ -1,0 +1,18 @@
+"""Serving layer: generation-based refresh + on-demand decision lookups.
+
+The paper's production shape (§6 — "deployed to production and called
+on a daily basis") on top of the streaming solver:
+
+    engine.RefreshEngine / WorkloadSpec / Generation — immutable
+        published solves, warm-started refreshes, atomic pointer flips,
+        preemption-safe via the solver's own checkpoint/resume;
+    decisions.DecisionService — O(chunk) point/batched lookups against
+        the live generation, bitwise-equal to full materialisation.
+"""
+from .decisions import DecisionService  # noqa: F401
+from .engine import (  # noqa: F401
+    Generation,
+    RefreshEngine,
+    WorkloadSpec,
+    synthetic_source,
+)

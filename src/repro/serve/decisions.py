@@ -1,0 +1,145 @@
+"""On-demand decision lookups: "what is x for user i?" in O(chunk).
+
+Production (§6) does not consume the solve as an O(n) decision matrix —
+it asks for single users' allocations as traffic arrives. The solver
+already never materialises x (``chunked.decisions_chunk`` streams it);
+this module adds the random-access path: a :class:`DecisionService`
+bound to one published :class:`~repro.serve.engine.Generation`
+regenerates ONLY the chunk owning the queried user from the chunk
+source and computes that chunk's decisions with
+:func:`repro.core.chunked.decisions_rows` — the exact per-row
+arithmetic of full materialisation, so a lookup is **bitwise-equal** to
+the corresponding row of ``decisions_chunk`` streamed over the whole
+source (pinned by tests).
+
+Why the parity holds: the decision for a row is ``select_sparse`` at
+``lam`` intersected with the §5.4 projection ``pt > tau``, and both the
+selection and the group-profit row sum ``pt`` are computed behind the
+same optimization barriers in every caller (``adjusted_profit_chunk``,
+the pinned row reduction), so the comparison against ``tau`` — where a
+half-ulp would flip a row sitting exactly on the removal threshold —
+resolves identically whether the chunk is one of many in an export scan
+or a lone cache fill here. The service jits one per-chunk function and
+reuses it for every fill.
+
+Chunks are cached under a small LRU (``cache_chunks``), so serving a
+traffic mixture with locality touches the source far less than once per
+query; the worst case (adversarially scattered users) degrades to one
+chunk regeneration per query, still O(chunk), never O(n).
+"""
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+from typing import Iterable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.chunked import ChunkSource, decisions_rows
+from ..core.prefetch import HostChunkSource
+
+__all__ = ["DecisionService"]
+
+
+@functools.lru_cache(maxsize=32)
+def _jit_rows(q: int):
+    """Jitted decisions_rows for one q — shared across services so
+    repeated lookups never re-trace. tau is always an operand: a
+    no-projection generation carries tau = -inf, and running it through
+    the same compare keeps one compiled signature (and the same
+    arithmetic as the materialisation path)."""
+    return jax.jit(lambda p, b, lam, valid, tau:
+                   decisions_rows(p, b, lam, q, valid, tau))
+
+
+class DecisionService:
+    """Point and batched decision queries against one generation.
+
+    ``source`` is the generation's workload as either source family —
+    a traced :class:`~repro.core.chunked.ChunkSource` or a host-side
+    :class:`~repro.core.prefetch.HostChunkSource`; the engine's
+    :meth:`~repro.serve.engine.RefreshEngine.decision_service` builds it
+    from the generation's spec. ``generation`` supplies ``(lam, tau,
+    spec.q)``. The service holds O(cache_chunks · chunk · K) host state
+    and nothing else.
+    """
+
+    def __init__(self, source, generation, cache_chunks: int = 16):
+        if cache_chunks < 1:
+            raise ValueError(f"cache_chunks must be >= 1, "
+                             f"got {cache_chunks}")
+        if source.k != generation.spec.k or source.n != generation.spec.n \
+                or source.chunk != generation.spec.chunk:
+            raise ValueError(
+                f"source shape (n={source.n}, k={source.k}, "
+                f"chunk={source.chunk}) does not match the generation's "
+                f"spec {generation.spec} — lookups would silently answer "
+                "for a different workload")
+        self.source = source
+        self.generation = generation
+        self.q = generation.spec.q
+        self.lam = jnp.asarray(generation.lam)
+        # tau = -inf (nothing removed) still goes through the projection
+        # compare so the arithmetic matches the materialisation path.
+        self.tau = jnp.asarray(generation.tau)
+        self.cache_chunks = cache_chunks
+        self._cache: OrderedDict[int, np.ndarray] = OrderedDict()
+        self.stats = {"queries": 0, "hits": 0, "fills": 0, "evictions": 0}
+        self._fn = _jit_rows(self.q)
+
+    def _fetch(self, ci: int):
+        if isinstance(self.source, HostChunkSource):
+            p, b = self.source.fn(int(ci))
+            return jnp.asarray(p), jnp.asarray(b)
+        # Traced sources run their fn eagerly on a concrete index.
+        return self.source.fn(jnp.int32(ci))
+
+    def _chunk_decisions(self, ci: int) -> np.ndarray:
+        """(chunk, K) bool decisions for chunk ``ci``, through the LRU."""
+        hit = self._cache.get(ci)
+        if hit is not None:
+            self.stats["hits"] += 1
+            self._cache.move_to_end(ci)
+            return hit
+        p, b = self._fetch(ci)
+        rows = ci * self.source.chunk + np.arange(self.source.chunk)
+        valid = jnp.asarray(rows < self.source.n)
+        x = np.asarray(self._fn(p, b, self.lam, valid, self.tau))
+        self.stats["fills"] += 1
+        self._cache[ci] = x
+        if len(self._cache) > self.cache_chunks:
+            self._cache.popitem(last=False)
+            self.stats["evictions"] += 1
+        return x
+
+    def decide(self, user: int) -> np.ndarray:
+        """The (K,) bool decision row for one user of the generation."""
+        n, chunk = self.source.n, self.source.chunk
+        user = int(user)
+        if not 0 <= user < n:
+            raise IndexError(f"user {user} outside [0, {n})")
+        self.stats["queries"] += 1
+        return self._chunk_decisions(user // chunk)[user % chunk]
+
+    def decide_batch(self, users: Iterable[int]) -> np.ndarray:
+        """(len(users), K) bool decisions, chunk-grouped source access.
+
+        Queries are answered in input order but the owning chunks are
+        each regenerated at most once per call (grouped fills), so a
+        batch over m users touches min(m, chunks-spanned) chunks.
+        """
+        users = np.asarray(list(users), np.int64)
+        n, chunk = self.source.n, self.source.chunk
+        if users.size and (users.min() < 0 or users.max() >= n):
+            bad = users[(users < 0) | (users >= n)][0]
+            raise IndexError(f"user {int(bad)} outside [0, {n})")
+        self.stats["queries"] += int(users.size)
+        out = np.zeros((users.size, self.source.k), bool)
+        order = np.argsort(users // chunk, kind="stable")
+        for j in order:
+            u = int(users[j])
+            out[j] = self._chunk_decisions(u // chunk)[u % chunk]
+        return out

@@ -1,0 +1,358 @@
+"""Generation-based refresh engine: the solver as a daily-called service.
+
+The paper's deployment claim (§6) is not a single solve — "the system
+has been deployed to production and called on a daily basis": budgets
+and traffic shift between calls, and each day's solve starts from
+yesterday's prices rather than cold. This module strings the repo's
+existing ingredients (host-fed sharded streaming, ``lam0`` warm starts,
+checkpoint/resume) into that production shape.
+
+A **generation** is one immutable published solve of one immutable
+workload. The :class:`RefreshEngine` owns a root directory of them:
+
+    <root>/LIVE.json                     atomic live-generation pointer
+    <root>/gen_000007/
+        spec.json                        the workload + refresh intent
+                                         (written BEFORE solving — the
+                                         durable record a resumed
+                                         process replays from)
+        ckpt/                            solver resume states
+                                         (core/prefetch.py protocol)
+        record/step_00000000/            the published Generation payload
+
+``refresh(**deltas)`` derives the next workload spec from the live one
+(budget scaling, traffic/seed churn, chunk-count growth — any
+:class:`WorkloadSpec` field), re-solves it with
+:func:`repro.core.prefetch.solve_streaming_host` **warm-started from
+the live generation's multipliers**, and publishes a constant-size
+:class:`Generation` record (lam, tau, finalize histograms, solver
+fingerprint — never the O(n) decisions). Publication is two atomic
+steps: the record is a ``ckpt.save`` (rename-published), and the LIVE
+pointer is a ``ckpt.write_json`` flip — a reader holding the pointer
+therefore never observes a half-published solve; it sees the previous
+generation until the instant the new one is complete on disk.
+
+Preemption safety falls out of the solver's own resume protocol
+(DESIGN.md §7): the refresh checkpoints into the generation's ``ckpt/``
+directory, and because ``spec.json`` records the workload and warm
+start *before* the solve begins, a killed refresh is re-entrant —
+calling ``refresh`` again (or :meth:`RefreshEngine.recover`) resumes
+the pending generation mid-solve and publishes a record bitwise
+identical to the uninterrupted one (the solver's fingerprint check
+refuses a drifted spec or warm start). A crash *between* the record
+save and the pointer flip is likewise recovered: the completed record
+is found and only the flip is replayed.
+
+Lookups against the live generation never materialise O(n) state — see
+:class:`repro.serve.decisions.DecisionService`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from ..checkpoint import ckpt
+from ..core.prefetch import (
+    HostChunkSource,
+    solve_streaming_host,
+    source_fingerprint,
+)
+from ..core.types import SolverConfig
+
+__all__ = ["WorkloadSpec", "Generation", "RefreshEngine",
+           "synthetic_source"]
+
+_POINTER = "LIVE.json"
+_RECORD_STEP = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """One generation's workload identity (JSON-serialisable, hashable).
+
+    The engine is generic over what these fields *mean*: its
+    ``make_source`` callback turns a spec into the
+    :class:`~repro.core.prefetch.HostChunkSource` to solve. The default
+    (:func:`synthetic_source`) reads them as the §6 synthetic workload;
+    the marketing example reads ``budget_scale``/``seed`` against its
+    own fixed user base. Refresh deltas are just field replacements:
+    ``budget_scale`` models the paper's daily budget shifts, ``seed``
+    traffic churn (a different user population), ``n`` traffic growth
+    (more chunks), all three composable.
+    """
+
+    seed: int
+    n: int
+    k: int
+    chunk: int
+    q: int = 1
+    tightness: float = 0.5
+    budget_scale: float = 1.0
+
+    def replace(self, **kw) -> "WorkloadSpec":
+        """A copy with the given fields replaced (the refresh delta)."""
+        return dataclasses.replace(self, **kw)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WorkloadSpec":
+        return cls(**d)
+
+
+def synthetic_source(spec: WorkloadSpec) -> HostChunkSource:
+    """Default workload factory: the §6 sparse instance, budget-scaled.
+
+    ``data.synth.sparse_host_chunk_source`` keyed on ``(seed, chunk
+    index)`` — restart-deterministic as checkpoint/resume requires —
+    with the generator's tightness-scaled budgets multiplied by
+    ``spec.budget_scale`` (the daily-refresh knob). The scale is applied
+    as a single f32 multiply so the same spec always produces the same
+    budget bytes (the solver fingerprint hashes them).
+    """
+    from ..data.synth import sparse_host_chunk_source
+
+    src = sparse_host_chunk_source(spec.seed, spec.n, spec.k, spec.chunk,
+                                   q=spec.q, tightness=spec.tightness)
+    budgets = (src.budgets * np.float32(spec.budget_scale)).astype(np.float32)
+    return src._replace(budgets=budgets)
+
+
+class Generation(NamedTuple):
+    """One published solve: everything lookups need, nothing O(n).
+
+    ``lam``/``tau`` are the multipliers and §5.4 removal threshold that
+    define the primal decisions (regenerate any row with
+    ``chunked.decisions_rows``); ``fin_hist`` the fused-finalize
+    removable histograms (None when ``cfg.postprocess`` was off);
+    ``fingerprint`` the solver's resume-state identity hash of
+    (source, cfg, q, lam0) — the proof of *which* solve this record
+    publishes. ``warm`` records whether the refresh started from the
+    parent's multipliers.
+    """
+
+    gen: int
+    spec: WorkloadSpec
+    lam: np.ndarray        # (K,)
+    tau: np.ndarray        # ()
+    iters: int
+    r: np.ndarray          # (K,) post-projection consumption
+    primal: np.ndarray     # ()
+    dual: np.ndarray       # ()
+    fin_hist: Optional[tuple]   # (cons_hist (K, E+1), gain_hist (E+1,))
+    fingerprint: np.ndarray     # (8,) uint8
+    warm: bool
+    path: str              # this generation's directory
+
+
+class RefreshEngine:
+    """Immutable-generation refresh driver over one root directory.
+
+    ``make_source`` maps a :class:`WorkloadSpec` to the
+    :class:`~repro.core.prefetch.HostChunkSource` to solve (default:
+    the §6 synthetic workload). ``cfg``/``mesh``/``slots`` are passed
+    straight to :func:`~repro.core.prefetch.solve_streaming_host`; give
+    ``cfg.checkpoint_every`` a value to make in-flight refreshes
+    preemption-safe (the engine supplies the per-generation checkpoint
+    directory either way). Engines are cheap handles: any number of
+    processes may *read* (``live()``, ``generation()``) concurrently
+    with one writer running ``refresh``.
+    """
+
+    def __init__(self, root, base_spec: WorkloadSpec,
+                 make_source: Callable[[WorkloadSpec],
+                                       HostChunkSource] = synthetic_source,
+                 cfg: SolverConfig = SolverConfig(), mesh=None,
+                 slots: Optional[int] = None):
+        self.root = pathlib.Path(root)
+        self.base_spec = base_spec
+        self.make_source = make_source
+        self.cfg = cfg
+        self.mesh = mesh
+        self.slots = slots
+
+    # -- directory layout ---------------------------------------------------
+
+    def _gen_dir(self, gen_id: int) -> pathlib.Path:
+        return self.root / f"gen_{gen_id:06d}"
+
+    def live_gen_id(self) -> Optional[int]:
+        """The published pointer, or None before the first generation."""
+        ptr = ckpt.read_json(self.root, _POINTER)
+        return None if ptr is None else int(ptr["gen"])
+
+    def live(self) -> Optional[Generation]:
+        """The live generation record (constant-size read), or None."""
+        gen_id = self.live_gen_id()
+        return None if gen_id is None else self.generation(gen_id)
+
+    def generation(self, gen_id: int) -> Generation:
+        """Load one published generation's record by id."""
+        gdir = self._gen_dir(gen_id)
+        meta = ckpt.read_json(gdir, "spec.json")
+        if meta is None:
+            raise ValueError(
+                f"generation {gen_id} has no spec.json under {gdir} — it "
+                "was never started in this root")
+        state = ckpt.restore_auto(gdir / "record", _RECORD_STEP)
+        fin_hist = None
+        if "fin_ch" in state:
+            fin_hist = (np.asarray(state["fin_ch"]),
+                        np.asarray(state["fin_gh"]))
+        return Generation(
+            gen=gen_id,
+            spec=WorkloadSpec.from_json(meta["spec"]),
+            lam=np.asarray(state["lam"]),
+            tau=np.asarray(state["tau"]),
+            iters=int(np.asarray(state["iters"])),
+            r=np.asarray(state["r"]),
+            primal=np.asarray(state["primal"]),
+            dual=np.asarray(state["dual"]),
+            fin_hist=fin_hist,
+            fingerprint=np.asarray(state["fingerprint"]),
+            warm=bool(np.asarray(state["warm"])),
+            path=str(gdir),
+        )
+
+    def _pending(self):
+        """(gen_id, meta) of a started-but-unpublished generation, or None.
+
+        A generation is pending when its ``spec.json`` exists but the
+        LIVE pointer has not reached it. At most one can exist: refresh
+        always works on ``live + 1``.
+        """
+        nxt = (self.live_gen_id() + 1) if self.live_gen_id() is not None \
+            else 0
+        meta = ckpt.read_json(self._gen_dir(nxt), "spec.json")
+        return None if meta is None else (nxt, meta)
+
+    # -- the refresh itself -------------------------------------------------
+
+    def refresh(self, *, warm: bool = True, **deltas) -> Generation:
+        """Solve the next generation and atomically publish it.
+
+        ``deltas`` are :class:`WorkloadSpec` field replacements against
+        the live generation's spec (the first refresh starts from
+        ``base_spec``); ``warm`` starts the solve from the live
+        multipliers (the production default — the whole point of the
+        daily-call shape) instead of the all-ones cold start.
+
+        Re-entrant under preemption: if a previous call was killed
+        mid-solve, the next call with the *same* requested spec resumes
+        it from the generation's checkpoint directory and publishes the
+        bitwise-identical record; a different spec raises (finish or
+        discard the pending generation first — two concurrent intents
+        for the same generation id cannot both be honoured).
+        """
+        live = self.live()
+        spec = (live.spec if live is not None else self.base_spec).replace(
+            **deltas)
+        gen_id = live.gen + 1 if live is not None else 0
+        warm = bool(warm and live is not None)   # effective: gen 0 is cold
+
+        pending = self._pending()
+        if pending is not None:
+            pend_id, meta = pending
+            pend_spec = WorkloadSpec.from_json(meta["spec"])
+            if pend_spec != spec or bool(meta["warm"]) != warm:
+                raise ValueError(
+                    f"generation {pend_id} is already pending with spec "
+                    f"{pend_spec} (warm={meta['warm']}) but this refresh "
+                    f"asked for {spec} (warm={warm}); resume the pending "
+                    "refresh by repeating its deltas (or recover()), or "
+                    f"delete {self._gen_dir(pend_id)} to discard it")
+            return self._run(pend_id, pend_spec, bool(meta["warm"]), live)
+        return self._run(gen_id, spec, warm, live)
+
+    def recover(self) -> Optional[Generation]:
+        """Finish a preempted refresh, if any; None when nothing pends.
+
+        Replays the pending generation from its durable intent record:
+        resumes the solve from its checkpoints (or, when the crash fell
+        between the record save and the pointer flip, just flips the
+        pointer). The published record is bitwise the one the killed
+        process would have produced.
+        """
+        pending = self._pending()
+        if pending is None:
+            return None
+        gen_id, meta = pending
+        spec = WorkloadSpec.from_json(meta["spec"])
+        parent = self.live()
+        return self._run(gen_id, spec, bool(meta["warm"]), parent)
+
+    def _run(self, gen_id: int, spec: WorkloadSpec, warm: bool,
+             parent: Optional[Generation]) -> Generation:
+        gdir = self._gen_dir(gen_id)
+        ckdir = gdir / "ckpt"
+        record_done = ckpt.latest_step(gdir / "record") is not None
+        source, lam0 = None, None
+        if not record_done:
+            # Validate the refresh and construct its source BEFORE the
+            # intent becomes durable: an invalid call (bad deltas, a
+            # make_source that rejects the spec) must fail with nothing
+            # pending on disk, or it would wedge every later refresh
+            # behind a pending generation that can never complete.
+            if warm and parent is not None:
+                if parent.spec.k != spec.k:
+                    raise ValueError(
+                        f"cannot warm-start across a knapsack-count "
+                        f"change (K {parent.spec.k} -> {spec.k}); pass "
+                        "warm=False")
+                lam0 = jnp.asarray(parent.lam, self.cfg.dtype)
+            source = self.make_source(spec)
+        # Durable intent, written before any solve work: the record a
+        # killed refresh is replayed from. Idempotent on resume.
+        ckpt.write_json(gdir, "spec.json", {
+            "gen": gen_id,
+            "spec": spec.to_json(),
+            "warm": bool(warm and parent is not None),
+            "parent": None if parent is None else parent.gen,
+        })
+
+        if not record_done:
+            res = solve_streaming_host(
+                source, self.cfg, q=spec.q, lam0=lam0, mesh=self.mesh,
+                slots=self.slots, checkpoint_dir=str(ckdir),
+                resume_from=str(ckdir))
+            record = {
+                "iters": np.int32(res.iters),
+                "warm": np.int32(lam0 is not None),
+                "lam": np.asarray(res.lam),
+                "tau": np.asarray(res.tau),
+                "r": np.asarray(res.r),
+                "primal": np.asarray(res.primal),
+                "dual": np.asarray(res.dual),
+                "fingerprint": source_fingerprint(
+                    source, self.cfg, spec.q,
+                    None if lam0 is None else np.asarray(lam0)),
+            }
+            if res.fin_hist is not None:
+                record["fin_ch"] = np.asarray(res.fin_hist[0])
+                record["fin_gh"] = np.asarray(res.fin_hist[1])
+            # Publication step 1: the record lands atomically...
+            ckpt.save(gdir / "record", _RECORD_STEP, record)
+        # ...step 2: the pointer flip makes it live. A crash between the
+        # two leaves a complete record that recover()/refresh() re-flips.
+        ckpt.write_json(self.root, _POINTER, {"gen": gen_id})
+        return self.generation(gen_id)
+
+    # -- lookups ------------------------------------------------------------
+
+    def decision_service(self, generation: Optional[Generation] = None,
+                         cache_chunks: int = 16):
+        """A DecisionService over ``generation`` (default: the live one)."""
+        from .decisions import DecisionService
+
+        gen = self.live() if generation is None else generation
+        if gen is None:
+            raise ValueError("no live generation to serve lookups from — "
+                             "run refresh() first")
+        return DecisionService(self.make_source(gen.spec), gen,
+                               cache_chunks=cache_chunks)

@@ -1,0 +1,418 @@
+"""Generation-based serving: refresh engine + decision service contracts.
+
+The contracts under test (repro/serve/, DESIGN.md §9):
+
+* a warm-started refresh of a budget-perturbed generation converges in
+  strictly fewer iterations than the cold solve of the same workload,
+  and publishes exactly the solve ``solve_streaming_host`` would
+  produce (the engine adds durability, not arithmetic);
+* publication is atomic — a crash at ANY point (mid-solve, between the
+  record save and the pointer flip) leaves the previous generation
+  live, and the re-entrant refresh/recover path publishes a record
+  bitwise-identical to the uninterrupted one (the subprocess test at
+  the bottom really SIGKILLs an 8-virtual-device refresh);
+* DecisionService lookups — single and batched, through the LRU chunk
+  cache — are bitwise-equal to full ``decisions_chunk``
+  materialisation for every queried user.
+"""
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.core import SolverConfig, SparseKP
+from repro.core.chunked import array_source, decisions_chunk
+from repro.core.prefetch import solve_streaming_host
+from repro.serve import (
+    DecisionService,
+    RefreshEngine,
+    WorkloadSpec,
+    synthetic_source,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+SPEC = WorkloadSpec(seed=3, n=4096, k=8, chunk=256, q=2, tightness=0.4)
+CFG = SolverConfig(reduce="bucketed", max_iters=60, checkpoint_every=4)
+
+RESULT_FIELDS = ["lam", "tau", "iters", "r", "primal", "dual"]
+
+
+def _assert_gen_equal(a, b):
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+    assert (a.fin_hist is None) == (b.fin_hist is None)
+    if a.fin_hist is not None:
+        for x, y in zip(a.fin_hist, b.fin_hist):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class _Kill(Exception):
+    """In-process stand-in for preemption, raised from the source fn."""
+
+
+def _killing_factory(after):
+    calls = {"n": 0}
+
+    def make(spec):
+        src = synthetic_source(spec)
+        inner = src.fn
+
+        def fn(i):
+            calls["n"] += 1
+            if calls["n"] > after:
+                raise _Kill()
+            return inner(i)
+
+        return src._replace(fn=fn)
+
+    return make, calls
+
+
+def _materialise(spec, lam, tau):
+    """Full decisions via decisions_chunk over the same rows (the oracle)."""
+    src = synthetic_source(spec)
+    c = -(-src.n // src.chunk)
+    p = np.concatenate([src.fn(i)[0] for i in range(c)])[:src.n]
+    b = np.concatenate([src.fn(i)[1] for i in range(c)])[:src.n]
+    kp = SparseKP(p=jnp.asarray(p), b=jnp.asarray(b),
+                  budgets=jnp.asarray(src.budgets))
+    asrc = array_source(kp, src.chunk)
+    rows = []
+    for i in range(c):
+        x, valid = decisions_chunk(asrc, lam, spec.q, i, tau=tau)
+        rows.append(np.asarray(x)[np.asarray(valid)])
+    return np.concatenate(rows), asrc
+
+
+# ---------------------------------------------------------------------------
+# Refresh: warm beats cold, and the engine publishes the solver's bits.
+# ---------------------------------------------------------------------------
+
+def test_warm_refresh_strictly_fewer_iters_than_cold(tmp_path):
+    """Acceptance bar: on a budget-perturbed generation the warm-started
+    refresh converges in strictly fewer iterations than cold."""
+    eng = RefreshEngine(tmp_path / "warm", SPEC, cfg=CFG)
+    g0 = eng.refresh()
+    assert not g0.warm and g0.gen == 0
+    g1 = eng.refresh(budget_scale=0.9)
+    assert g1.warm and g1.gen == 1
+
+    cold = RefreshEngine(tmp_path / "cold", SPEC.replace(budget_scale=0.9),
+                         cfg=CFG).refresh()
+    assert not cold.warm
+    assert g1.iters < cold.iters, (g1.iters, cold.iters)
+    # Same workload, same solution quality: both trajectories stop at
+    # tol, so the fixed points (and primals) agree to tol-level noise —
+    # the warm start buys iterations, not a different answer.
+    assert abs(float(g1.primal) - float(cold.primal)) \
+        <= 2e-2 * abs(float(cold.primal))
+
+
+def test_refresh_is_exactly_the_streaming_solve(tmp_path):
+    """The engine adds durability, not arithmetic: a published generation
+    is field-for-field the direct solve_streaming_host result under the
+    same lam0, and the fingerprint is the solver's own."""
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    g0 = eng.refresh()
+    g1 = eng.refresh(budget_scale=0.9)
+
+    spec1 = SPEC.replace(budget_scale=0.9)
+    direct = solve_streaming_host(
+        synthetic_source(spec1), CFG.replace(checkpoint_every=0), q=SPEC.q,
+        lam0=jnp.asarray(g0.lam))
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(g1, f)),
+                                      np.asarray(getattr(direct, f)),
+                                      err_msg=f)
+    for x, y in zip(g1.fin_hist, direct.fin_hist):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert g1.fingerprint.shape == (8,) and g1.fingerprint.dtype == np.uint8
+    assert not np.array_equal(g0.fingerprint, g1.fingerprint)
+
+
+def test_refresh_deltas_churn_and_growth(tmp_path):
+    """Traffic churn (seed) and growth (n, more chunks) are refresh
+    deltas like budget scaling; the spec is immutable per generation."""
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    eng.refresh()
+    g1 = eng.refresh(seed=11)                  # churn: new population
+    assert g1.spec.seed == 11 and g1.warm
+    g2 = eng.refresh(n=SPEC.n * 2)             # growth: 16 -> 32 chunks
+    assert g2.spec.n == SPEC.n * 2 and g2.spec.seed == 11
+    assert eng.live().gen == 2
+    # Records of past generations stay immutable and loadable.
+    assert eng.generation(1).spec == g1.spec
+    svc = eng.decision_service()
+    assert svc.decide(SPEC.n * 2 - 1).shape == (SPEC.k,)
+
+
+# ---------------------------------------------------------------------------
+# Atomic publication and preemption.
+# ---------------------------------------------------------------------------
+
+def test_kill_mid_refresh_resume_bitwise(tmp_path):
+    """A refresh killed mid-solve leaves the old generation live; the
+    re-entrant refresh (same deltas) resumes from the generation's
+    checkpoints and publishes bitwise the uninterrupted record."""
+    ref_root = tmp_path / "ref"
+    era = RefreshEngine(ref_root, SPEC, cfg=CFG)
+    era.refresh()
+    ref = era.refresh(budget_scale=0.9)
+
+    root = tmp_path / "killed"
+    eng = RefreshEngine(root, SPEC, cfg=CFG)
+    eng.refresh()
+    make, _ = _killing_factory(40)             # mid epoch ~3 of 16-chunk passes
+    with pytest.raises(_Kill):
+        RefreshEngine(root, SPEC, make_source=make, cfg=CFG).refresh(
+            budget_scale=0.9)
+    assert eng.live().gen == 0                 # publication never half-done
+    assert eng._pending() is not None
+
+    got = RefreshEngine(root, SPEC, cfg=CFG).refresh(budget_scale=0.9)
+    _assert_gen_equal(got, ref)
+    assert eng.live().gen == 1
+
+
+def test_crash_between_record_and_flip_recovered(tmp_path):
+    """The record lands, the process dies before the pointer flip: the
+    old generation stays live; recover() re-flips without re-solving."""
+    import repro.serve.engine as engine_mod
+
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    eng.refresh()
+    real = ckpt.write_json
+    state = {"fail": True}
+
+    def failing(d, name, payload):
+        if name == "LIVE.json" and state["fail"]:
+            state["fail"] = False
+            raise OSError("simulated crash before pointer flip")
+        return real(d, name, payload)
+
+    engine_mod.ckpt.write_json = failing
+    try:
+        with pytest.raises(OSError, match="pointer flip"):
+            eng.refresh(budget_scale=0.9)
+    finally:
+        engine_mod.ckpt.write_json = real
+    assert eng.live().gen == 0
+
+    make, calls = _killing_factory(10 ** 9)
+    rec = RefreshEngine(tmp_path, SPEC, make_source=make, cfg=CFG).recover()
+    assert rec.gen == 1
+    assert calls["n"] == 0, "recover() must not re-solve a landed record"
+    assert eng.live().gen == 1
+
+
+def test_pending_spec_mismatch_refused(tmp_path):
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    eng.refresh()
+    make, _ = _killing_factory(40)
+    with pytest.raises(_Kill):
+        RefreshEngine(tmp_path, SPEC, make_source=make, cfg=CFG).refresh(
+            budget_scale=0.9)
+    with pytest.raises(ValueError, match="pending"):
+        eng.refresh(budget_scale=1.1)
+    assert eng.recover().gen == 1              # the pending one, finished
+
+
+def test_recover_without_pending_is_none(tmp_path):
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    assert eng.recover() is None
+    eng.refresh()
+    assert eng.recover() is None
+    assert eng.live().gen == 0
+
+
+def test_invalid_refresh_leaves_nothing_pending(tmp_path):
+    """An invalid refresh call (warm across a K change, a make_source
+    that rejects the spec) fails BEFORE its intent becomes durable — it
+    must not wedge the engine behind an uncompletable pending
+    generation."""
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    eng.refresh()
+    with pytest.raises(ValueError, match="knapsack-count"):
+        eng.refresh(k=SPEC.k * 2)              # warm across K change
+    assert eng._pending() is None
+
+    def rejecting(spec):
+        raise ValueError("make_source rejects this spec")
+
+    bad = RefreshEngine(tmp_path, SPEC, make_source=rejecting, cfg=CFG)
+    with pytest.raises(ValueError, match="rejects"):
+        bad.refresh(budget_scale=0.9)
+    assert eng._pending() is None
+    # The engine is not wedged: the next valid refresh publishes.
+    assert eng.refresh(budget_scale=0.9).gen == 1
+    # Cold across a K change is a legitimate refresh.
+    g2 = eng.refresh(k=SPEC.k * 2, warm=False)
+    assert g2.gen == 2 and not g2.warm and g2.lam.shape == (SPEC.k * 2,)
+
+
+def test_run_scenario_without_warm_refreshes_is_ok(tmp_path):
+    """Satellite CLI accounting: a single-generation scenario and a
+    --resume relaunch that finds everything published must not report a
+    spurious warm-vs-cold failure (there was nothing warm to account)."""
+    from repro.launch.refresh import run_scenario
+
+    cfg = CFG.replace(checkpoint_every=0)
+    out = run_scenario(SPEC, 1, tmp_path / "one", cfg, lookups=32,
+                       verify=True)
+    assert out["warm_refreshes"] == 0 and out["lookups_bitwise"]
+
+    root = tmp_path / "resumed"
+    first = run_scenario(SPEC, 2, root, cfg, lookups=32, verify=False)
+    assert first["warm_refreshes"] == 1
+    again = run_scenario(SPEC, 2, root, cfg, lookups=32, verify=True,
+                         resume=True)
+    assert again["warm_refreshes"] == 0 and again["lookups_bitwise"]
+    assert again["per_generation"] == []
+
+
+# ---------------------------------------------------------------------------
+# DecisionService: O(chunk) lookups, bitwise the materialised solution.
+# ---------------------------------------------------------------------------
+
+def test_decision_service_bitwise_vs_materialisation(tmp_path):
+    """Acceptance bar: every queried user's decision — single or batched,
+    cache hit or fill — equals the corresponding row of the full
+    decisions_chunk materialisation."""
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    eng.refresh()
+    gen = eng.refresh(budget_scale=0.9)
+    full, asrc = _materialise(gen.spec, gen.lam, gen.tau)
+    assert full.any(), "degenerate: nobody selected"
+
+    svc = eng.decision_service(cache_chunks=4)  # forces evictions
+    rng = np.random.default_rng(0)
+    users = rng.integers(0, SPEC.n, 600)
+    np.testing.assert_array_equal(svc.decide_batch(users), full[users])
+    singles = np.stack([svc.decide(int(u)) for u in users[:100]])
+    np.testing.assert_array_equal(singles, full[users[:100]])
+    assert svc.stats["fills"] >= 4 and svc.stats["evictions"] > 0
+    assert svc.stats["hits"] > 0
+
+    # The traced-source family answers identically (same decisions_rows).
+    svc2 = DecisionService(asrc, gen, cache_chunks=4)
+    np.testing.assert_array_equal(svc2.decide_batch(users[:200]),
+                                  full[users[:200]])
+
+
+def test_decision_service_validation(tmp_path):
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    gen = eng.refresh()
+    svc = eng.decision_service()
+    with pytest.raises(IndexError, match="outside"):
+        svc.decide(SPEC.n)
+    with pytest.raises(IndexError, match="outside"):
+        svc.decide_batch([0, -1])
+    with pytest.raises(ValueError, match="cache_chunks"):
+        eng.decision_service(cache_chunks=0)
+    wrong = synthetic_source(SPEC.replace(n=SPEC.n * 2))
+    with pytest.raises(ValueError, match="does not match"):
+        DecisionService(wrong, gen)
+    with pytest.raises(ValueError, match="no live generation"):
+        RefreshEngine(tmp_path / "empty", SPEC, cfg=CFG).decision_service()
+
+
+# ---------------------------------------------------------------------------
+# The acceptance bar, for real: SIGKILL an 8-virtual-device refresh in a
+# subprocess, resume, and compare the published generation bitwise.
+# ---------------------------------------------------------------------------
+
+_SIGKILL_SCRIPT = textwrap.dedent("""
+    import os, signal, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro.core import SolverConfig
+    from repro.serve import RefreshEngine, WorkloadSpec, synthetic_source
+
+    mode, kill_after, root, out = (sys.argv[1], int(sys.argv[2]),
+                                   sys.argv[3], sys.argv[4])
+    spec = WorkloadSpec(seed=3, n=2048, k=8, chunk=64, q=2, tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=40, checkpoint_every=1)
+    mesh = jax.make_mesh((8,), ("users",))
+
+    make = synthetic_source
+    if mode == "kill":
+        calls = {"n": 0}
+        def make(s):
+            src = synthetic_source(s)
+            inner = src.fn
+            def fn(i):
+                calls["n"] += 1
+                if calls["n"] > kill_after:
+                    os.kill(os.getpid(), signal.SIGKILL)
+                return inner(i)
+            return src._replace(fn=fn)
+
+    eng = RefreshEngine(root, spec, make_source=make, cfg=cfg,
+                        mesh=mesh, slots=8)
+    if eng.live_gen_id() is None:
+        eng = RefreshEngine(root, spec, make_source=synthetic_source,
+                            cfg=cfg, mesh=mesh, slots=8)
+        eng.refresh()                         # gen 0, uninterrupted
+        eng = RefreshEngine(root, spec, make_source=make, cfg=cfg,
+                            mesh=mesh, slots=8)
+    gen = eng.refresh(budget_scale=0.9)       # gen 1 (killed in "kill")
+    np.savez(out, lam=gen.lam, tau=gen.tau, iters=gen.iters, r=gen.r,
+             primal=gen.primal, dual=gen.dual, ch=gen.fin_hist[0],
+             gh=gen.fin_hist[1], warm=gen.warm)
+    print("GEN-OK", gen.gen, int(gen.iters))
+""")
+
+
+def _run_script(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run([sys.executable, "-c", _SIGKILL_SCRIPT] + args,
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout, cwd=str(REPO))
+
+
+@pytest.mark.slow
+def test_sigkill_refresh_resume_publishes_bitwise(tmp_path):
+    """An 8-virtual-device sharded refresh SIGKILLed mid-solve and
+    re-driven publishes a generation bitwise-identical to the
+    uninterrupted run (lam/tau/iters/r/primal/dual + both fused-finalize
+    histograms), and the pointer never exposes the half-done solve."""
+    ref = tmp_path / "ref.npz"
+    out = _run_script(["ref", "0", str(tmp_path / "ref_root"), str(ref)])
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "GEN-OK 1" in out.stdout
+
+    root = tmp_path / "killed_root"
+    killed = _run_script(["kill", "120", str(root), "x"])
+    assert killed.returncode == -signal.SIGKILL, (
+        killed.returncode, killed.stdout, killed.stderr)
+    # gen 0 is live, gen 1 pending with resume states on disk.
+    assert json_ptr_gen(root) == 0
+    assert ckpt.latest_step(root / "gen_000001" / "ckpt") is not None
+
+    got_path = tmp_path / "resumed.npz"
+    res = _run_script(["resume", "0", str(root), str(got_path)])
+    assert res.returncode == 0, res.stdout + res.stderr
+    want, got = np.load(ref), np.load(got_path)
+    for key in ["lam", "tau", "iters", "r", "primal", "dual", "ch", "gh",
+                "warm"]:
+        np.testing.assert_array_equal(got[key], want[key], err_msg=key)
+
+
+def json_ptr_gen(root):
+    ptr = ckpt.read_json(root, "LIVE.json")
+    return None if ptr is None else int(ptr["gen"])

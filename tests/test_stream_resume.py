@@ -161,6 +161,144 @@ def test_resume_fingerprint_mismatch_refused(tmp_path):
                              resume_from=str(tmp_path))
 
 
+def test_checkpoint_keep_is_configurable(tmp_path):
+    """Satellite: cfg.checkpoint_keep reaches ckpt.prune — the retention
+    is a knob, not the hardcoded 3 — and a pruned-to-one directory still
+    resumes (the newest state is always complete before pruning)."""
+    make, q = _instance()
+    base = solve_streaming_host(make(), SolverConfig(reduce="bucketed",
+                                                     max_iters=20),
+                                q=q, slots=4)
+
+    def steps(d):
+        return sorted(p.name for p in pathlib.Path(d).iterdir()
+                      if p.name.startswith("step_")
+                      and not p.name.endswith(".tmp"))
+
+    for keep in (1, 2):
+        d = tmp_path / f"keep{keep}"
+        cfg = SolverConfig(reduce="bucketed", max_iters=20,
+                           checkpoint_every=1, checkpoint_keep=keep)
+        res = solve_streaming_host(make(), cfg, q=q, slots=4,
+                                   checkpoint_dir=str(d))
+        _assert_bitwise(res, base)
+        assert len(steps(d)) == keep, steps(d)
+    # Default retention unchanged: 3 states on disk.
+    d3 = tmp_path / "default"
+    solve_streaming_host(
+        make(), SolverConfig(reduce="bucketed", max_iters=20,
+                             checkpoint_every=1),
+        q=q, slots=4, checkpoint_dir=str(d3))
+    assert len(steps(d3)) == 3, steps(d3)
+    with pytest.raises(ValueError, match="checkpoint_keep"):
+        solve_streaming_host(
+            make(), SolverConfig(checkpoint_every=1, checkpoint_keep=0),
+            q=q, checkpoint_dir=str(tmp_path / "zero"))
+    # Killed mid-solve with keep=1: the single retained state resumes
+    # bitwise (pruning never races the newest complete step away).
+    dk = tmp_path / "keep1_kill"
+    cfgk = SolverConfig(reduce="bucketed", max_iters=20,
+                        checkpoint_every=2, checkpoint_keep=1)
+    src, _ = _killing(make, 70)
+    with pytest.raises(_Kill):
+        solve_streaming_host(src, cfgk, q=q, slots=4,
+                             checkpoint_dir=str(dk))
+    assert len(steps(dk)) == 1
+    res = solve_streaming_host(make(), cfgk, q=q, resume_from=str(dk))
+    _assert_bitwise(res, base)
+
+
+# ---------------------------------------------------------------------------
+# Corrupted checkpoint directories: loud, actionable, never a silent
+# fresh start when a manifest exists.
+# ---------------------------------------------------------------------------
+
+def _checkpointed_dir(make, q, d):
+    cfg = SolverConfig(reduce="bucketed", max_iters=20, checkpoint_every=2)
+    solve_streaming_host(make(), cfg, q=q, slots=4, checkpoint_dir=str(d))
+    return cfg
+
+
+def test_truncated_manifest_raises_actionable(tmp_path):
+    """A present-but-unparseable manifest is corruption, not 'no
+    checkpoint': latest_step still reports the step and the restore
+    raises an error naming the file — resuming must never silently
+    discard the run."""
+    make, q = _instance()
+    cfg = _checkpointed_dir(make, q, tmp_path)
+    latest = ckpt.latest_step(tmp_path)
+    mpath = tmp_path / f"step_{latest:08d}" / "manifest.json"
+    mpath.write_text(mpath.read_text()[: len(mpath.read_text()) // 2])
+    assert ckpt.latest_step(tmp_path) == latest      # still visible
+    with pytest.raises(ValueError, match="manifest.*corrupt|truncated"):
+        ckpt.restore_auto(tmp_path, latest)
+    with pytest.raises(ValueError, match="could not restore"):
+        solve_streaming_host(make(), cfg, q=q, resume_from=str(tmp_path))
+
+
+def test_missing_leaf_file_raises_actionable(tmp_path):
+    make, q = _instance()
+    cfg = _checkpointed_dir(make, q, tmp_path)
+    latest = ckpt.latest_step(tmp_path)
+    step_dir = tmp_path / f"step_{latest:08d}"
+    victim = sorted(step_dir.glob("arr_*.npy"))[2]
+    victim.unlink()
+    with pytest.raises(ValueError, match=victim.name):
+        ckpt.restore_auto(tmp_path, latest)
+    with pytest.raises(ValueError, match="could not restore"):
+        solve_streaming_host(make(), cfg, q=q, resume_from=str(tmp_path))
+
+
+def test_corrupt_leaf_bytes_raise_actionable(tmp_path):
+    make, q = _instance()
+    _checkpointed_dir(make, q, tmp_path)
+    latest = ckpt.latest_step(tmp_path)
+    step_dir = tmp_path / f"step_{latest:08d}"
+    victim = sorted(step_dir.glob("arr_*.npy"))[0]
+    victim.write_bytes(victim.read_bytes()[:16])     # truncated .npy
+    with pytest.raises(ValueError, match="unreadable"):
+        ckpt.restore_auto(tmp_path, latest)
+
+
+def test_stale_tmp_only_is_fresh_start(tmp_path):
+    """A directory holding nothing but .tmp debris (killed first save)
+    genuinely has no checkpoint: latest_step is None and the solve
+    starts fresh — and the stale .tmp is pruned by the next save."""
+    make, q = _instance()
+    stale = tmp_path / "step_00000004.tmp"
+    stale.mkdir(parents=True)
+    (stale / "manifest.json").write_text('{"truncat')
+    assert ckpt.latest_step(tmp_path) is None
+    cfg = SolverConfig(reduce="bucketed", max_iters=15, checkpoint_every=2)
+    base = solve_streaming_host(make(), cfg.replace(checkpoint_every=0),
+                                q=q, slots=4)
+    res = solve_streaming_host(make(), cfg, q=q, slots=4,
+                               resume_from=str(tmp_path))
+    _assert_bitwise(res, base)
+    assert not stale.exists(), "prune should sweep stale .tmp debris"
+
+
+def test_missing_manifest_dir_is_not_a_step(tmp_path):
+    """A step-named directory without any manifest was not written by
+    this layer (the atomic rename publishes the manifest with the step):
+    it is ignored by latest_step, and restoring it by explicit step
+    number says why."""
+    bogus = tmp_path / "step_00000007"
+    bogus.mkdir(parents=True)
+    assert ckpt.latest_step(tmp_path) is None
+    with pytest.raises(ValueError, match="no manifest.json"):
+        ckpt.restore_auto(tmp_path, 7)
+
+
+def test_pointer_document_corruption_raises(tmp_path):
+    assert ckpt.read_json(tmp_path, "LIVE.json") is None
+    ckpt.write_json(tmp_path, "LIVE.json", {"gen": 3})
+    assert ckpt.read_json(tmp_path, "LIVE.json") == {"gen": 3}
+    (tmp_path / "LIVE.json").write_text('{"gen"')
+    with pytest.raises(ValueError, match="corrupt"):
+        ckpt.read_json(tmp_path, "LIVE.json")
+
+
 # ---------------------------------------------------------------------------
 # Kill + resume: bitwise equivalence at every interruption point.
 # ---------------------------------------------------------------------------

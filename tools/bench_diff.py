@@ -1,9 +1,19 @@
-"""Bench-regression smoke gate for the streamed solve.
+"""Bench-regression smoke gate for the streamed solve and the serve loop.
 
 ``python tools/bench_diff.py COMMITTED CURRENT [--tol 0.25]``
 
-Compares a freshly-measured ``BENCH_stream_passes.json`` (the CI smoke
-run) against the committed one, matching points by ``n``:
+The report kind is auto-detected. For serve reports
+(``BENCH_serve.json``, tagged ``"bench": "serve"``), points are matched
+by ``n`` and the **cold/warm iteration ratio** — the paper's daily-call
+warm-start payoff — must not shrink by more than ``--tol`` against the
+committed report, with warm strictly beating cold either way; lookup
+QPS is informational (wall noise). When the warm AND cold totals both
+match the committed point exactly (they are deterministic at a pinned
+slot count), the ratio check is trivially satisfied and any drift in
+either total is reported as a note.
+
+Otherwise the report is a ``BENCH_stream_passes.json`` (the CI smoke
+run) compared against the committed one, matching points by ``n``:
 
 * **Pass counts must match exactly** — they are deterministic (§5c
   accounting: iters + 1 fused, iters + 3 legacy), so any drift means a
@@ -35,8 +45,49 @@ def _points_by_n(report):
     return {p["n"]: p for p in report.get("points", [])}
 
 
+def diff_serve(committed: dict, current: dict, tol: float) -> list:
+    """Serve-report violations: the cold/warm ratio is the gated claim."""
+    problems = []
+    base = _points_by_n(committed)
+    new = _points_by_n(current)
+    shared = sorted(set(base) & set(new))
+    if not shared:
+        return [f"no shared n between committed {sorted(base)} and "
+                f"current {sorted(new)}"]
+    for n in shared:
+        ref, cur = base[n], new[n]
+        if cur["warm_iters_total"] >= cur["cold_iters_total"]:
+            problems.append(
+                f"n={n}: warm refreshes no longer beat cold "
+                f"({cur['warm_iters_total']} >= {cur['cold_iters_total']} "
+                "total iterations)")
+            continue
+        if (cur["warm_iters_total"] != ref["warm_iters_total"]
+                or cur["cold_iters_total"] != ref["cold_iters_total"]):
+            print(f"note: n={n} iteration totals moved "
+                  f"warm {ref['warm_iters_total']} -> "
+                  f"{cur['warm_iters_total']}, cold "
+                  f"{ref['cold_iters_total']} -> {cur['cold_iters_total']}"
+                  " (ratio still gated)")
+        if cur["cold_over_warm"] < ref["cold_over_warm"] * (1.0 - tol):
+            problems.append(
+                f"n={n}: cold/warm iteration ratio "
+                f"{ref['cold_over_warm']} -> {cur['cold_over_warm']} "
+                f"(warm-start payoff shrank > {tol:.0%})")
+        if not cur.get("lookups_bitwise", True):
+            problems.append(f"n={n}: lookups no longer bitwise-equal to "
+                            "materialisation")
+    return problems
+
+
 def diff(committed: dict, current: dict, tol: float) -> list:
     """Return a list of human-readable violations (empty = gate passes)."""
+    if committed.get("bench") == "serve" or current.get("bench") == "serve":
+        if committed.get("bench") != current.get("bench"):
+            return [f"report kind mismatch: committed "
+                    f"{committed.get('bench')!r} vs current "
+                    f"{current.get('bench')!r}"]
+        return diff_serve(committed, current, tol)
     problems = []
     base = _points_by_n(committed)
     new = _points_by_n(current)
