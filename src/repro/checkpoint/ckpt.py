@@ -10,6 +10,9 @@ Layout (one directory per step):
 * Atomicity: a crash mid-save leaves only a ``.tmp`` directory, which
   restore ignores and the next save overwrites — a restart can never see a
   torn checkpoint.
+* Durability: leaf files and manifests are fsynced before the rename and
+  the parent directory after it, so a published step (or pointer flip)
+  survives power loss, not just SIGKILL — see ``_fsync_dir``.
 * Restart: ``latest_step`` + ``restore`` rebuild the exact pytree.
 * Elastic re-sharding: restore takes an optional ``sharding_tree``; arrays
   are re-placed with ``jax.device_put`` against the *current* mesh, which
@@ -50,8 +53,37 @@ def _leaves_with_paths(tree):
     return flat, treedef
 
 
+def _fsync_dir(path) -> None:
+    """fsync a directory so its entries (renames, creations) are durable.
+
+    ``os.replace`` gives *atomicity* (a reader sees old or new, never a
+    tear) but not *durability*: after a power loss the rename itself can
+    be rolled back unless the parent directory's metadata was synced.
+    Platforms whose directory handles reject fsync are skipped — the
+    write stays atomic there, just not power-loss-durable.
+    """
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(directory, step: int, tree) -> str:
-    """Atomically write ``tree`` as checkpoint ``step``. Returns the path."""
+    """Atomically AND durably write ``tree`` as checkpoint ``step``.
+
+    Every leaf file and the manifest are fsynced before the directory
+    rename, and the parent directory is fsynced after it — without the
+    first, the rename can land while the data blocks are still only in
+    the page cache (a post-power-loss restore would see complete-looking
+    files full of zeros); without the second, the rename itself can be
+    undone. Returns the final path.
+    """
     d = pathlib.Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     final = d / f"step_{step:08d}"
@@ -64,7 +96,10 @@ def save(directory, step: int, tree) -> str:
     for i, (path, leaf) in enumerate(flat):
         arr = np.asarray(leaf)
         fname = f"arr_{i:05d}.npy"
-        np.save(tmp / fname, arr)
+        with open(tmp / fname, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["leaves"].append({
             "path": jax.tree_util.keystr(path),
             "file": fname,
@@ -73,9 +108,13 @@ def save(directory, step: int, tree) -> str:
         })
     with open(tmp / "manifest.json", "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if final.exists():
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(d)
     return str(final)
 
 
@@ -213,8 +252,11 @@ def write_json(directory, name: str, payload: dict) -> str:
     tmp = d / f"{name}.tmp"
     with open(tmp, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
     final = d / name
     os.replace(tmp, final)
+    _fsync_dir(d)
     return str(final)
 
 

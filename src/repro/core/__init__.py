@@ -45,5 +45,13 @@ from .prefetch import (  # noqa: F401
     solve_streaming_host,
     source_fingerprint,
 )
+from .faults import (  # noqa: F401
+    ChunkFetchError,
+    FaultPlan,
+    FaultPolicy,
+    faulty_source,
+    fetch_with_retries,
+    resilient_source,
+)
 from .instances import dense_instance, shard_key, sparse_instance  # noqa: F401
 from .moe_router import RouterOut, scd_route, topk_route  # noqa: F401

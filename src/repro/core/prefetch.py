@@ -33,6 +33,17 @@ the current chunk's compute:
   partials and the fold never depend on which physical device ran a
   slot, the same solve is *bitwise invariant to the mesh size*, which
   is what makes elastic resume possible.
+* **Fault tolerance.** With ``cfg.fetch_retries > 0`` (or a
+  ``fetch_timeout`` / ``verify_refetch``) the source is wrapped in
+  :func:`repro.core.faults.resilient_source` at solve entry, so *every*
+  fetch site — the epoch loops, the sharded per-slot sub-sources, the
+  presolve head read, the fingerprint's chunk-0 probe — retries
+  transient failures under a capped, deterministically jittered backoff
+  and an optional per-fetch timeout. Retries re-run only the pure
+  fetch, never the accumulate, so a solve that survives injected
+  transient faults is **bitwise identical** to the fault-free solve
+  (chaos-parity tests pin this); exhausted retries raise a
+  ``ChunkFetchError`` naming the chunk index and the attempt history.
 * **Preemption safety.** ``cfg.checkpoint_every`` writes a
   constant-size resume state (lam, the damping carry, the
   fused-finalize slot partials, an epoch/chunk cursor and a source
@@ -74,6 +85,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..checkpoint import ckpt
 from ..compat import shard_map
 from .bucketing import make_edges, threshold_from_hist
+from .faults import policy_from_cfg, resilient_source
 from .chunked import (
     StreamResult,
     _metrics_init,
@@ -365,6 +377,12 @@ def source_fingerprint(source: HostChunkSource, cfg: SolverConfig, q: int,
     """
     lam0 = (np.ones((source.k,), np.float32) if lam0 is None
             else np.asarray(lam0, np.float32))
+    # The chunk-0 probe fetches like any other read: under the cfg's
+    # fault policy, so a transient fault during stamping retries instead
+    # of failing a refresh whose solve already survived it.
+    policy = policy_from_cfg(cfg)
+    if policy is not None:
+        source = resilient_source(source, policy, verify=cfg.verify_refetch)
     return _fingerprint(source, cfg, q, lam0)
 
 
@@ -934,6 +952,16 @@ def solve_streaming_host(source: HostChunkSource,
         raise ValueError(
             "solve_streaming_host supports cd_mode='sync' (cyclic CD "
             "re-feeds the whole source K times per iteration)")
+    # Fault layer: wrap the source once, here, so every downstream fetch
+    # site (epochs, sharded sub-sources, presolve, fingerprint) retries
+    # transient failures under cfg's policy. Retries re-run only the
+    # pure fetch — the accumulate consumes exactly the bytes a clean
+    # fetch returns, which is what keeps a fault-surviving solve bitwise
+    # equal to the fault-free one.
+    fault_policy = policy_from_cfg(cfg)
+    if fault_policy is not None:
+        source = resilient_source(source, fault_policy,
+                                  verify=cfg.verify_refetch)
     # cfg.checkpoint_every is the cadence; the directory is the enable
     # switch. A cadence with no directory runs unprotected (so reference
     # runs can share the exact cfg of a checkpointed job); the launcher

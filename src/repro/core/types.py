@@ -130,6 +130,29 @@ class SolverConfig:
     # resume-state fingerprint like checkpoint_every: changing the
     # retention across a restart is legitimate.
     checkpoint_keep: int = 3
+    # Host-fed streaming fault tolerance (core/faults.py): with
+    # fetch_retries > 0 every source.fn chunk read — epochs, sharded
+    # sub-sources, the presolve head, the fingerprint's chunk-0 probe —
+    # runs through a retrying fetcher with capped exponential backoff
+    # and deterministic (chunk, attempt)-keyed jitter. Retries re-run
+    # only the pure fetch, never the accumulate, so a solve that
+    # survives transient faults is bitwise the fault-free solve.
+    # 0 disables the wrapper entirely (fail-fast, the historical path).
+    # All fetch_* knobs and verify_refetch are excluded from the resume
+    # fingerprint: changing the fault policy across a restart is
+    # legitimate, like checkpoint_every.
+    fetch_retries: int = 0
+    fetch_backoff: float = 0.05
+    fetch_backoff_growth: float = 2.0
+    fetch_backoff_cap: float = 2.0
+    fetch_jitter: float = 0.25
+    # Per-fetch wall-clock bound in seconds, enforced by a worker
+    # thread; overruns are retryable timeouts. 0 disables.
+    fetch_timeout: float = 0.0
+    # Paranoid fetch-is-pure check: read every chunk twice and require
+    # byte-equality, turning silent payload corruption into a detected,
+    # retryable fault. Doubles source reads; off by default.
+    verify_refetch: bool = False
     # Streaming finalize strategy (core/chunked.py): "fused" folds the
     # final metrics, the §5.4 removable histograms and the projection
     # into ONE pass over the chunk source (iters + 1 total); "legacy"

@@ -18,13 +18,25 @@ iterations or a lookup mismatches materialisation — this is the CI
 serving smoke gate (``--smoke``), which on the CI image runs over 8
 virtual devices (sharded host feeding, slots == devices).
 
+``--chaos`` is the fault-domain gate (DESIGN.md §10): the scenario runs
+twice — once clean, once with every chunk fetch injected with
+deterministic drops, slow reads, corrupt payloads and a repeat-offender
+chunk (:func:`repro.core.faults.faulty_source`) under the retrying
+ingest (``fetch_retries``/``verify_refetch``). Every generation's
+published record must be **bitwise identical** between the two roots,
+every lookup must verify against materialisation, and the chaos run's
+serving stats must show zero stale (degraded) serves — the retries
+absorbed every fault, no reader ever saw a torn or stale byte.
+
     PYTHONPATH=src python -m repro.launch.refresh --smoke
+    PYTHONPATH=src python -m repro.launch.refresh --smoke --chaos
     PYTHONPATH=src python -m repro.launch.refresh --users 1000000 \
         --generations 7 --root /tmp/refresh
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
 import tempfile
 import time
@@ -36,8 +48,14 @@ import jax.numpy as jnp
 
 from repro.core import SolverConfig, SparseKP
 from repro.core.chunked import array_source, decisions_chunk
+from repro.core.faults import (
+    FaultPlan,
+    faulty_source,
+    policy_from_cfg,
+    resilient_source,
+)
 from repro.core.prefetch import solve_streaming_host
-from repro.serve import RefreshEngine, WorkloadSpec
+from repro.serve import RefreshEngine, WorkloadSpec, synthetic_source
 
 
 def _budget_schedule(generations: int, seed: int):
@@ -60,6 +78,12 @@ def _verify_lookups(engine: RefreshEngine, svc, users) -> bool:
     """Sampled lookups vs full decisions_chunk materialisation, bitwise."""
     gen = svc.generation
     src = engine.make_source(gen.spec)
+    # Under --chaos the raw source injects faults; the oracle read must
+    # go through the same retry layer the solver used or the injected
+    # corruption would poison the reference bytes.
+    policy = policy_from_cfg(engine.cfg)
+    if policy is not None:
+        src = resilient_source(src, policy, verify=engine.cfg.verify_refetch)
     c = -(-src.n // src.chunk)
     p = np.concatenate([src.fn(i)[0] for i in range(c)])[:src.n]
     b = np.concatenate([src.fn(i)[1] for i in range(c)])[:src.n]
@@ -81,9 +105,10 @@ def _verify_lookups(engine: RefreshEngine, svc, users) -> bool:
 
 def run_scenario(spec: WorkloadSpec, generations: int, root,
                  cfg: SolverConfig, mesh=None, slots=None, lookups=512,
-                 verify=True, resume=False):
+                 verify=True, resume=False, make_source=synthetic_source):
     """The multi-day loop; returns the accounting dict the bench reuses."""
-    engine = RefreshEngine(root, spec, cfg=cfg, mesh=mesh, slots=slots)
+    engine = RefreshEngine(root, spec, make_source=make_source, cfg=cfg,
+                           mesh=mesh, slots=slots)
     if resume:
         rec = engine.recover()
         if rec is not None:
@@ -151,6 +176,74 @@ def run_scenario(spec: WorkloadSpec, generations: int, root,
             "lookup": lookup, "lookups_bitwise": ok}
 
 
+# The chaos injection plan and retry budget must respect the probability
+# compounding: verify_refetch doubles every read, so an attempt succeeds
+# with (1 - drop - corrupt)^2 and the per-chunk budget has to cover
+# thousands of fetches without exhausting. drop 8% + corrupt 4% under 8
+# retries keeps P(any exhaustion over a smoke run) negligible while
+# still firing hundreds of injected faults.
+_CHAOS_PLAN_KW = dict(drop=0.08, slow=0.05, slow_s=0.002, corrupt=0.04,
+                      offenders=(1,), offender_failures=2)
+_CHAOS_CFG_KW = dict(fetch_retries=8, fetch_backoff=1e-4,
+                     fetch_backoff_cap=1e-3, verify_refetch=True)
+
+_RECORD_FIELDS = ["lam", "tau", "iters", "r", "primal", "dual",
+                  "fingerprint"]
+
+
+def run_chaos(spec: WorkloadSpec, generations: int, root,
+              cfg: SolverConfig, mesh=None, slots=None, lookups=256):
+    """The fault-domain gate: chaos run bitwise-equals the clean run.
+
+    Runs the scenario twice under ``root`` — ``clean/`` fault-free and
+    ``chaos/`` with every chunk fetch going through
+    :func:`~repro.core.faults.faulty_source` injection absorbed by the
+    retrying ingest — then compares every published generation's record
+    field-for-field. Returns ``(ok, accounting)``.
+    """
+    root = pathlib.Path(root)
+    print(f"[chaos] clean pass -> {root / 'clean'}")
+    clean_out = run_scenario(spec, generations, root / "clean", cfg,
+                             mesh=mesh, slots=slots, lookups=lookups)
+    plan = FaultPlan(seed=spec.seed, **_CHAOS_PLAN_KW)
+    chaos_cfg = cfg.replace(**_CHAOS_CFG_KW)
+    print(f"[chaos] injected pass -> {root / 'chaos'} ({plan})")
+    chaos_out = run_scenario(
+        spec, generations, root / "chaos", chaos_cfg, mesh=mesh,
+        slots=slots, lookups=lookups,
+        make_source=lambda s: faulty_source(synthetic_source(s), plan))
+
+    clean_eng = RefreshEngine(root / "clean", spec, cfg=cfg)
+    chaos_eng = RefreshEngine(root / "chaos", spec, cfg=chaos_cfg)
+    ok = True
+    for g in range(generations):
+        want, got = clean_eng.generation(g), chaos_eng.generation(g)
+        for f in _RECORD_FIELDS:
+            if np.asarray(getattr(want, f)).tobytes() \
+                    != np.asarray(getattr(got, f)).tobytes():
+                ok = False
+                print(f"[chaos] FAIL: gen {g} field {f} differs from the "
+                      "fault-free run")
+        for i, (x, y) in enumerate(zip(want.fin_hist or (),
+                                       got.fin_hist or ())):
+            if np.asarray(x).tobytes() != np.asarray(y).tobytes():
+                ok = False
+                print(f"[chaos] FAIL: gen {g} fin_hist[{i}] differs")
+    stats = chaos_out["lookup"]["cache"]
+    if stats.get("stale_serves", 0) != 0:
+        ok = False
+        print(f"[chaos] FAIL: {stats['stale_serves']} stale serves — "
+              "lookup retries did not absorb the injected faults")
+    if not (clean_out["lookups_bitwise"] and chaos_out["lookups_bitwise"]):
+        ok = False
+    if ok:
+        print(f"[chaos] OK: {generations} generations bitwise-identical "
+              "under injected faults "
+              f"({stats.get('retries', 0)} lookup retries absorbed, "
+              "0 stale serves)")
+    return ok, {"clean": clean_out, "chaos": chaos_out}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--users", type=int, default=65536)
@@ -173,6 +266,10 @@ def main():
                     help="skip the O(n) lookup-roundtrip check")
     ap.add_argument("--smoke", action="store_true",
                     help="small scenario (CI gate; exits 1 on any failure)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the scenario clean AND under injected "
+                         "fetch faults; exit 1 unless every generation "
+                         "is bitwise identical between the two")
     args = ap.parse_args()
 
     if args.smoke:
@@ -188,6 +285,10 @@ def main():
     root = args.root or tempfile.mkdtemp(prefix="refresh_")
     print(f"[refresh] root {root}; {ndev} device(s)"
           + (f", slots {args.slots or ndev}" if mesh else ""))
+    if args.chaos:
+        ok, _ = run_chaos(spec, args.generations, root, cfg, mesh=mesh,
+                          slots=args.slots, lookups=args.lookups)
+        sys.exit(0 if ok else 1)
     out = run_scenario(spec, args.generations, root, cfg, mesh=mesh,
                        slots=args.slots, lookups=args.lookups,
                        verify=not args.no_verify, resume=args.resume)

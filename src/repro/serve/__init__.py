@@ -7,9 +7,11 @@ on a daily basis") on top of the streaming solver:
         published solves, warm-started refreshes, atomic pointer flips,
         preemption-safe via the solver's own checkpoint/resume;
     decisions.DecisionService — O(chunk) point/batched lookups against
-        the live generation, bitwise-equal to full materialisation.
+        the live generation, bitwise-equal to full materialisation;
+        retrying chunk regeneration + degraded (stale-flagged) fallback
+        to the previous generation under the core/faults.py policy.
 """
-from .decisions import DecisionService  # noqa: F401
+from .decisions import DecisionService, LookupResult  # noqa: F401
 from .engine import (  # noqa: F401
     Generation,
     RefreshEngine,

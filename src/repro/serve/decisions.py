@@ -22,26 +22,39 @@ resolves identically whether the chunk is one of many in an export scan
 or a lone cache fill here. The service jits one per-chunk function and
 reuses it for every fill.
 
-Chunks are cached under a small LRU (``cache_chunks``), so serving a
-traffic mixture with locality touches the source far less than once per
-query; the worst case (adversarially scattered users) degrades to one
-chunk regeneration per query, still O(chunk), never O(n).
+Chunks are cached under a small LRU (``cache_chunks``) **keyed by the
+generation's solver fingerprint plus the chunk index** — never the
+chunk index alone. A service that follows a pointer flip
+(:meth:`DecisionService.rebind`) therefore can never serve a chunk
+computed under the previous generation's multipliers: the old entries
+simply stop matching (and stay useful as the degraded-mode fallback's
+cache).
+
+Fault domain: chunk regenerations run through the same retry layer as
+the solver's ingest (:mod:`repro.core.faults`) when a ``fault_policy``
+is given. A lookup whose regeneration exhausts its retries *degrades*
+instead of failing when the service is armed with a ``fallback``
+generation (the previously published one): the answer comes from the
+fallback's decisions with an explicit ``stale=True`` flag, and
+:meth:`health` accounts retries, fetch failures and stale serves so the
+degradation is observable, never silent.
 """
 from __future__ import annotations
 
 import functools
 from collections import OrderedDict
-from typing import Iterable
+from typing import Iterable, NamedTuple, Optional
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from ..core.chunked import ChunkSource, decisions_rows
+from ..core.chunked import decisions_rows
+from ..core.faults import ChunkFetchError, fetch_with_retries
 from ..core.prefetch import HostChunkSource
 
-__all__ = ["DecisionService"]
+__all__ = ["DecisionService", "LookupResult"]
 
 
 @functools.lru_cache(maxsize=32)
@@ -55,6 +68,32 @@ def _jit_rows(q: int):
                    decisions_rows(p, b, lam, q, valid, tau))
 
 
+class LookupResult(NamedTuple):
+    """One answered lookup: the decision row, and where it came from.
+
+    ``stale`` is True only on the degraded path — the current
+    generation's chunk could not be regenerated and the answer is the
+    ``fallback`` generation's decision for the same user. ``gen`` names
+    the generation that actually answered.
+    """
+
+    x: np.ndarray          # (K,) bool decision row
+    stale: bool
+    gen: int
+
+
+class _Bound(NamedTuple):
+    """One generation binding: source + record + the cache key prefix."""
+
+    source: object         # HostChunkSource or traced ChunkSource
+    generation: object     # serve.engine.Generation
+    lam: jnp.ndarray
+    tau: jnp.ndarray
+    q: int
+    key: bytes             # generation fingerprint — the LRU key prefix
+    fn: object             # jitted decisions_rows for this q
+
+
 class DecisionService:
     """Point and batched decision queries against one generation.
 
@@ -65,12 +104,38 @@ class DecisionService:
     from the generation's spec. ``generation`` supplies ``(lam, tau,
     spec.q)``. The service holds O(cache_chunks · chunk · K) host state
     and nothing else.
+
+    ``fault_policy`` (a :class:`repro.core.faults.FaultPolicy`) makes
+    every host-source chunk regeneration retry transient failures;
+    ``verify`` double-reads each chunk (fetch-is-pure corruption
+    check). ``fallback`` — a ``(source, generation)`` pair, normally
+    the previously published generation — arms degraded mode: a lookup
+    whose regeneration exhausts its retries is answered from the
+    fallback with ``stale=True`` instead of raising.
     """
 
-    def __init__(self, source, generation, cache_chunks: int = 16):
+    def __init__(self, source, generation, cache_chunks: int = 16,
+                 fault_policy=None, verify: bool = False,
+                 fallback: Optional[tuple] = None):
         if cache_chunks < 1:
             raise ValueError(f"cache_chunks must be >= 1, "
                              f"got {cache_chunks}")
+        self.cache_chunks = cache_chunks
+        self.fault_policy = fault_policy
+        self.verify = verify
+        # One LRU across generations: entries are keyed by (generation
+        # fingerprint, chunk index), so a rebind keeps the old entries
+        # harmless (they can only answer for their own generation) and
+        # the fallback path still hits them.
+        self._cache: OrderedDict = OrderedDict()
+        self.stats = {"queries": 0, "hits": 0, "fills": 0, "evictions": 0,
+                      "retries": 0, "fetch_failures": 0, "stale_serves": 0}
+        self._current = self._bind(source, generation)
+        self._fallback = (self._bind(*fallback)
+                          if fallback is not None else None)
+
+    @staticmethod
+    def _bind(source, generation) -> _Bound:
         if source.k != generation.spec.k or source.n != generation.spec.n \
                 or source.chunk != generation.spec.chunk:
             raise ValueError(
@@ -78,51 +143,124 @@ class DecisionService:
                 f"chunk={source.chunk}) does not match the generation's "
                 f"spec {generation.spec} — lookups would silently answer "
                 "for a different workload")
-        self.source = source
-        self.generation = generation
-        self.q = generation.spec.q
-        self.lam = jnp.asarray(generation.lam)
-        # tau = -inf (nothing removed) still goes through the projection
-        # compare so the arithmetic matches the materialisation path.
-        self.tau = jnp.asarray(generation.tau)
-        self.cache_chunks = cache_chunks
-        self._cache: OrderedDict[int, np.ndarray] = OrderedDict()
-        self.stats = {"queries": 0, "hits": 0, "fills": 0, "evictions": 0}
-        self._fn = _jit_rows(self.q)
+        return _Bound(
+            source=source, generation=generation,
+            lam=jnp.asarray(generation.lam),
+            # tau = -inf (nothing removed) still goes through the
+            # projection compare so the arithmetic matches the
+            # materialisation path.
+            tau=jnp.asarray(generation.tau),
+            q=generation.spec.q,
+            key=np.asarray(generation.fingerprint, np.uint8).tobytes(),
+            fn=_jit_rows(generation.spec.q))
 
-    def _fetch(self, ci: int):
-        if isinstance(self.source, HostChunkSource):
-            p, b = self.source.fn(int(ci))
+    # -- binding surface (kept for callers that predate degraded mode) ---
+
+    @property
+    def source(self):
+        return self._current.source
+
+    @property
+    def generation(self):
+        return self._current.generation
+
+    @property
+    def lam(self):
+        return self._current.lam
+
+    @property
+    def tau(self):
+        return self._current.tau
+
+    @property
+    def q(self):
+        return self._current.q
+
+    def rebind(self, source, generation):
+        """Follow a pointer flip: bind the new generation, demote the old.
+
+        The previous binding becomes the degraded-mode fallback. The
+        chunk cache is *not* cleared — its entries are keyed by
+        generation fingerprint, so the new generation can never hit the
+        old generation's chunks (the cross-generation regression test
+        pins this), while the demoted generation's warm entries keep
+        serving the fallback path for free.
+        """
+        old = self._current
+        self._current = self._bind(source, generation)
+        self._fallback = old
+
+    # -- the chunk pipeline ------------------------------------------------
+
+    def _on_retry(self, chunk, attempt, err, delay):
+        self.stats["retries"] += 1
+
+    def _fetch(self, bound: _Bound, ci: int):
+        if isinstance(bound.source, HostChunkSource):
+            if self.fault_policy is not None:
+                p, b = fetch_with_retries(
+                    bound.source.fn, int(ci), self.fault_policy,
+                    verify=self.verify, on_retry=self._on_retry)
+            else:
+                p, b = bound.source.fn(int(ci))
             return jnp.asarray(p), jnp.asarray(b)
         # Traced sources run their fn eagerly on a concrete index.
-        return self.source.fn(jnp.int32(ci))
+        return bound.source.fn(jnp.int32(ci))
 
-    def _chunk_decisions(self, ci: int) -> np.ndarray:
+    def _chunk_decisions(self, bound: _Bound, ci: int) -> np.ndarray:
         """(chunk, K) bool decisions for chunk ``ci``, through the LRU."""
-        hit = self._cache.get(ci)
+        key = (bound.key, ci)
+        hit = self._cache.get(key)
         if hit is not None:
             self.stats["hits"] += 1
-            self._cache.move_to_end(ci)
+            self._cache.move_to_end(key)
             return hit
-        p, b = self._fetch(ci)
-        rows = ci * self.source.chunk + np.arange(self.source.chunk)
-        valid = jnp.asarray(rows < self.source.n)
-        x = np.asarray(self._fn(p, b, self.lam, valid, self.tau))
+        p, b = self._fetch(bound, ci)
+        rows = ci * bound.source.chunk + np.arange(bound.source.chunk)
+        valid = jnp.asarray(rows < bound.source.n)
+        x = np.asarray(bound.fn(p, b, bound.lam, valid, bound.tau))
         self.stats["fills"] += 1
-        self._cache[ci] = x
+        self._cache[key] = x
         if len(self._cache) > self.cache_chunks:
             self._cache.popitem(last=False)
             self.stats["evictions"] += 1
         return x
 
-    def decide(self, user: int) -> np.ndarray:
-        """The (K,) bool decision row for one user of the generation."""
-        n, chunk = self.source.n, self.source.chunk
+    # -- lookups -----------------------------------------------------------
+
+    def lookup(self, user: int) -> LookupResult:
+        """The decision row for one user, with staleness provenance.
+
+        The degraded path: when the current generation's owning chunk
+        cannot be regenerated (retries exhausted — a
+        ``ChunkFetchError``) and a fallback generation is armed that
+        covers the user, the fallback's decision is returned with
+        ``stale=True``. With no fallback (or one the user outgrew) the
+        fetch error propagates: an explicit failure beats a silently
+        wrong answer.
+        """
+        cur = self._current
+        n, chunk = cur.source.n, cur.source.chunk
         user = int(user)
         if not 0 <= user < n:
             raise IndexError(f"user {user} outside [0, {n})")
         self.stats["queries"] += 1
-        return self._chunk_decisions(user // chunk)[user % chunk]
+        try:
+            row = self._chunk_decisions(cur, user // chunk)[user % chunk]
+            return LookupResult(row, False, cur.generation.gen)
+        except ChunkFetchError:
+            self.stats["fetch_failures"] += 1
+            fb = self._fallback
+            if fb is None or user >= fb.source.n:
+                raise
+            row = self._chunk_decisions(
+                fb, user // fb.source.chunk)[user % fb.source.chunk]
+            self.stats["stale_serves"] += 1
+            return LookupResult(row, True, fb.generation.gen)
+
+    def decide(self, user: int) -> np.ndarray:
+        """The (K,) bool decision row for one user of the generation."""
+        return self.lookup(user).x
 
     def decide_batch(self, users: Iterable[int]) -> np.ndarray:
         """(len(users), K) bool decisions, chunk-grouped source access.
@@ -130,16 +268,37 @@ class DecisionService:
         Queries are answered in input order but the owning chunks are
         each regenerated at most once per call (grouped fills), so a
         batch over m users touches min(m, chunks-spanned) chunks.
+        Degraded lookups fall back per user (see :meth:`lookup`).
         """
         users = np.asarray(list(users), np.int64)
-        n, chunk = self.source.n, self.source.chunk
+        n, chunk = self._current.source.n, self._current.source.chunk
         if users.size and (users.min() < 0 or users.max() >= n):
             bad = users[(users < 0) | (users >= n)][0]
             raise IndexError(f"user {int(bad)} outside [0, {n})")
-        self.stats["queries"] += int(users.size)
-        out = np.zeros((users.size, self.source.k), bool)
+        out = np.zeros((users.size, self._current.source.k), bool)
         order = np.argsort(users // chunk, kind="stable")
         for j in order:
-            u = int(users[j])
-            out[j] = self._chunk_decisions(u // chunk)[u % chunk]
+            out[j] = self.lookup(int(users[j])).x
         return out
+
+    # -- observability -----------------------------------------------------
+
+    def health(self) -> dict:
+        """Serving health: retry/degradation counters + cache stats.
+
+        ``stale_serves`` counting up means the current generation's
+        source is failing past its retry budget and queries are being
+        answered by the fallback generation — degraded but alive;
+        ``fetch_failures`` without matching ``stale_serves`` means
+        queries are *failing* (no fallback covered them).
+        """
+        fb = self._fallback
+        return {
+            **self.stats,
+            "generation": self._current.generation.gen,
+            "fallback_generation": (None if fb is None
+                                    else fb.generation.gen),
+            "cached_chunks": len(self._cache),
+            "cache_chunks": self.cache_chunks,
+            "degraded": self.stats["stale_serves"] > 0,
+        }

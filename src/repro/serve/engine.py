@@ -50,6 +50,8 @@ from __future__ import annotations
 
 import dataclasses
 import pathlib
+import re
+import shutil
 from typing import Callable, NamedTuple, Optional
 
 import numpy as np
@@ -57,6 +59,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from ..checkpoint import ckpt
+from ..core.faults import ChunkFetchError, policy_from_cfg
 from ..core.prefetch import (
     HostChunkSource,
     solve_streaming_host,
@@ -68,7 +71,9 @@ __all__ = ["WorkloadSpec", "Generation", "RefreshEngine",
            "synthetic_source"]
 
 _POINTER = "LIVE.json"
+_FAILED = "FAILED.json"
 _RECORD_STEP = 0
+_GEN_RE = re.compile(r"gen_(\d+)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,13 +174,21 @@ class RefreshEngine:
                  make_source: Callable[[WorkloadSpec],
                                        HostChunkSource] = synthetic_source,
                  cfg: SolverConfig = SolverConfig(), mesh=None,
-                 slots: Optional[int] = None):
+                 slots: Optional[int] = None, keep: Optional[int] = None):
         self.root = pathlib.Path(root)
         self.base_spec = base_spec
         self.make_source = make_source
         self.cfg = cfg
         self.mesh = mesh
         self.slots = slots
+        # Generation retention (the serving mirror of cfg.checkpoint_keep):
+        # every successful refresh sweeps all but the newest `keep`
+        # generations — never the live or pending one. None disables the
+        # automatic sweep; prune() can still be called explicitly.
+        if keep is not None and keep < 1:
+            raise ValueError(f"keep must be >= 1 (got {keep}): retaining "
+                             "zero generations would delete the live one")
+        self.keep = keep
 
     # -- directory layout ---------------------------------------------------
 
@@ -317,10 +330,26 @@ class RefreshEngine:
         })
 
         if not record_done:
-            res = solve_streaming_host(
-                source, self.cfg, q=spec.q, lam0=lam0, mesh=self.mesh,
-                slots=self.slots, checkpoint_dir=str(ckdir),
-                resume_from=str(ckdir))
+            try:
+                res = solve_streaming_host(
+                    source, self.cfg, q=spec.q, lam0=lam0, mesh=self.mesh,
+                    slots=self.slots, checkpoint_dir=str(ckdir),
+                    resume_from=str(ckdir))
+            except ChunkFetchError as e:
+                # Failure containment: the solve exhausted its retry
+                # budget. LIVE.json is untouched (readers keep serving
+                # the previous generation); the pending directory is
+                # stamped with the failure so operators — and recover()
+                # — can see what died and re-drive or discard it.
+                ckpt.write_json(gdir, _FAILED, {
+                    "gen": gen_id,
+                    "error": str(e),
+                    "chunk": e.chunk,
+                    "attempts": len(e.history),
+                    "history": [[a, err, slept]
+                                for a, err, slept in e.history],
+                })
+                raise
             record = {
                 "iters": np.int32(res.iters),
                 "warm": np.int32(lam0 is not None),
@@ -338,21 +367,121 @@ class RefreshEngine:
                 record["fin_gh"] = np.asarray(res.fin_hist[1])
             # Publication step 1: the record lands atomically...
             ckpt.save(gdir / "record", _RECORD_STEP, record)
+        # A re-driven refresh that succeeded clears any failure stamp a
+        # previous attempt left: the generation is healthy now.
+        failed = gdir / _FAILED
+        if failed.exists():
+            failed.unlink()
         # ...step 2: the pointer flip makes it live. A crash between the
         # two leaves a complete record that recover()/refresh() re-flips.
         ckpt.write_json(self.root, _POINTER, {"gen": gen_id})
+        if self.keep is not None:
+            self.prune()
         return self.generation(gen_id)
+
+    # -- failure surface + generation GC ------------------------------------
+
+    def failed(self) -> Optional[dict]:
+        """The pending generation's failure stamp, or None.
+
+        A refresh whose solve exhausted its retry budget leaves the
+        LIVE pointer untouched and writes ``FAILED.json`` (error, chunk,
+        attempt counters) into the pending directory; this surfaces it.
+        ``recover()`` / ``refresh()`` with the same deltas re-drive the
+        generation (transient outages heal), clearing the stamp on
+        success; ``discard_pending()`` throws the intent away instead.
+        """
+        pending = self._pending()
+        if pending is None:
+            return None
+        return ckpt.read_json(self._gen_dir(pending[0]), _FAILED)
+
+    def discard_pending(self) -> Optional[int]:
+        """Delete a pending (unpublished) generation; returns its id.
+
+        The explicit give-up path for a pending refresh that can never
+        complete (e.g. its source is permanently gone): removes the
+        intent, checkpoints and failure stamp so the next refresh can
+        claim the generation id afresh. Published generations are never
+        touched. None when nothing pends.
+        """
+        pending = self._pending()
+        if pending is None:
+            return None
+        gen_id = pending[0]
+        shutil.rmtree(self._gen_dir(gen_id))
+        return gen_id
+
+    def generation_ids(self) -> list:
+        """Ids of every generation directory under the root, sorted."""
+        if not self.root.exists():
+            return []
+        return sorted(int(m.group(1)) for p in self.root.iterdir()
+                      if (m := _GEN_RE.fullmatch(p.name)))
+
+    def prune(self, keep: Optional[int] = None) -> list:
+        """Delete all but the newest ``keep`` generations; returns the ids
+        removed.
+
+        The serving twin of ``ckpt.prune`` (``cfg.checkpoint_keep``):
+        bounds the root's disk footprint under daily refresh churn. The
+        **live** generation and a **pending** one (live + 1 with a
+        durable intent) are never deleted, whatever ``keep`` says — the
+        pointer must always resolve and an in-flight refresh must keep
+        its resume states. Readers of *older* generations race this
+        sweep by design; they must treat a vanished generation as "the
+        pointer moved on" and re-resolve (DecisionService lookups are
+        unaffected — they hold the record in memory).
+        """
+        keep = self.keep if keep is None else keep
+        if keep is None or keep < 1:
+            raise ValueError(f"prune needs keep >= 1, got {keep}")
+        gens = self.generation_ids()
+        live = self.live_gen_id()
+        protected = set()
+        if live is not None:
+            protected.add(live)
+        pending = self._pending()
+        if pending is not None:
+            protected.add(pending[0])
+        survivors = set(gens[-keep:]) | protected
+        removed = []
+        for g in gens:
+            if g not in survivors:
+                shutil.rmtree(self._gen_dir(g))
+                removed.append(g)
+        return removed
 
     # -- lookups ------------------------------------------------------------
 
     def decision_service(self, generation: Optional[Generation] = None,
-                         cache_chunks: int = 16):
-        """A DecisionService over ``generation`` (default: the live one)."""
+                         cache_chunks: int = 16, fallback: bool = True):
+        """A DecisionService over ``generation`` (default: the live one).
+
+        The service inherits the engine cfg's fetch fault policy (its
+        chunk regenerations retry like the solver's ingest does), and —
+        with ``fallback`` (default) — is armed with the previous
+        published generation for degraded serving: a lookup whose chunk
+        regeneration exhausts its retries answers from the previous
+        generation with an explicit ``stale=True`` flag instead of
+        failing the query. No previous generation (gen 0, or pruned):
+        no fallback.
+        """
         from .decisions import DecisionService
 
         gen = self.live() if generation is None else generation
         if gen is None:
             raise ValueError("no live generation to serve lookups from — "
                              "run refresh() first")
+        fb = None
+        if fallback and gen.gen > 0:
+            try:
+                prev = self.generation(gen.gen - 1)
+                fb = (self.make_source(prev.spec), prev)
+            except (ValueError, OSError):
+                fb = None               # pruned or damaged: degrade without
         return DecisionService(self.make_source(gen.spec), gen,
-                               cache_chunks=cache_chunks)
+                               cache_chunks=cache_chunks,
+                               fault_policy=policy_from_cfg(self.cfg),
+                               verify=self.cfg.verify_refetch,
+                               fallback=fb)

@@ -1,0 +1,204 @@
+"""Property tests for the fault layer's schedule and injection algebra.
+
+The properties (repro/core/faults.py):
+
+* the backoff schedule is a pure function of ``(policy, chunk)`` —
+  replaying it yields identical floats (determinism is what lets the
+  chaos tests assert bitwise solver parity while faults fire);
+* it is monotone non-decreasing until the cap and never exceeds the
+  cap — guaranteed structurally by the ``growth >= 1 + jitter``
+  constructor constraint, checked here against adversarial policies;
+* attempts are bounded: a fetch runs at most ``max_retries + 1`` times
+  and its failure history records exactly the attempts made;
+* :func:`faulty_source` exhaustion semantics: an offender chunk with
+  ``offender_failures <= max_retries`` ALWAYS heals under retries, one
+  with ``offender_failures > max_retries`` ALWAYS exhausts — and clean
+  payloads pass through bit-identically.
+
+Each property has a deterministic twin (fixed cases, always run) and a
+hypothesis sweep (skipped without hypothesis unless REQUIRE_HYPOTHESIS
+is set — see tests/_hypothesis_compat.py).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.faults import (
+    ChunkFetchError,
+    FaultPlan,
+    FaultPolicy,
+    faulty_source,
+    fetch_with_retries,
+    resilient_source,
+)
+
+
+class _Src:
+    """Minimal HostChunkSource-shaped stand-in (duck-typed _replace/fn)."""
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def _replace(self, fn):
+        return _Src(fn)
+
+
+def _policies():
+    return st.builds(
+        FaultPolicy,
+        max_retries=st.integers(0, 8),
+        backoff_base=st.floats(0.0, 10.0, allow_nan=False),
+        backoff_growth=st.floats(2.0, 8.0, allow_nan=False),
+        backoff_cap=st.floats(0.0, 100.0, allow_nan=False),
+        jitter=st.floats(0.0, 0.99, allow_nan=False),
+        timeout=st.just(0.0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Schedule determinism + shape.
+# ---------------------------------------------------------------------------
+
+def check_schedule(policy, chunk):
+    s1 = policy.schedule(chunk)
+    s2 = policy.schedule(chunk)
+    # Determinism: bit-identical floats on replay.
+    assert s1 == s2 and len(s1) == policy.max_retries
+    for a, d in enumerate(s1, start=1):
+        assert d == policy.backoff(chunk, a)
+        # Bounded: never above the cap (and never negative).
+        assert 0.0 <= d <= policy.backoff_cap
+    # Monotone non-decreasing until the cap: once below the cap, the
+    # next delay is never smaller (growth >= 1 + jitter guarantees it).
+    for prev, nxt in zip(s1, s1[1:]):
+        if prev < policy.backoff_cap:
+            assert nxt >= prev, (prev, nxt, policy)
+
+
+@pytest.mark.parametrize("policy,chunk", [
+    (FaultPolicy(), 0),
+    (FaultPolicy(max_retries=8, jitter=0.0), 3),
+    (FaultPolicy(max_retries=6, backoff_base=1e-3, backoff_growth=5.0,
+                 backoff_cap=0.5, jitter=0.9), 12345),
+    (FaultPolicy(max_retries=5, backoff_base=0.0), 7),   # zero base: all 0
+    (FaultPolicy(max_retries=4, backoff_cap=0.0), 2),    # cap 0: all 0
+])
+def test_schedule_deterministic_twin(policy, chunk):
+    check_schedule(policy, chunk)
+
+
+@settings(max_examples=200, deadline=None)
+@given(policy=_policies(), chunk=st.integers(0, 2 ** 31 - 1))
+def test_schedule_props(policy, chunk):
+    check_schedule(policy, chunk)
+
+
+def test_jitter_decorrelates_chunks():
+    """Different chunks get different (deterministic) delays — retry
+    storms from co-failing workers spread out instead of thundering."""
+    policy = FaultPolicy(max_retries=1, backoff_base=1.0, backoff_cap=100.0,
+                         jitter=0.5)
+    delays = {policy.backoff(c, 1) for c in range(64)}
+    assert len(delays) > 32
+
+
+# ---------------------------------------------------------------------------
+# Attempt accounting.
+# ---------------------------------------------------------------------------
+
+def check_attempts(max_retries, failures):
+    calls = {"n": 0}
+
+    def fn(i):
+        occ = calls["n"]
+        calls["n"] += 1
+        if occ < failures:
+            raise IOError(f"occ {occ}")
+        return ("ok",)
+
+    policy = FaultPolicy(max_retries=max_retries, backoff_base=0.0)
+    if failures <= max_retries:
+        assert fetch_with_retries(fn, 1, policy,
+                                  sleep=lambda s: None) == ("ok",)
+        assert calls["n"] == failures + 1
+    else:
+        with pytest.raises(ChunkFetchError) as ei:
+            fetch_with_retries(fn, 1, policy, sleep=lambda s: None)
+        assert calls["n"] == max_retries + 1          # bounded attempts
+        assert len(ei.value.history) == max_retries + 1
+        assert ei.value.chunk == 1
+
+
+@pytest.mark.parametrize("max_retries,failures", [
+    (0, 0), (0, 1), (3, 3), (3, 4), (8, 2), (2, 100),
+])
+def test_attempts_deterministic_twin(max_retries, failures):
+    check_attempts(max_retries, failures)
+
+
+@settings(max_examples=100, deadline=None)
+@given(max_retries=st.integers(0, 10), failures=st.integers(0, 15))
+def test_attempts_props(max_retries, failures):
+    check_attempts(max_retries, failures)
+
+
+# ---------------------------------------------------------------------------
+# faulty_source exhaustion semantics under resilient_source.
+# ---------------------------------------------------------------------------
+
+def check_offender(max_retries, offender_failures):
+    payload = (np.arange(8, dtype=np.float32).reshape(2, 4),
+               np.ones((2, 4), np.float32))
+    plan = FaultPlan(seed=0, offenders=(5,),
+                     offender_failures=offender_failures)
+    policy = FaultPolicy(max_retries=max_retries, backoff_base=0.0)
+    src = resilient_source(faulty_source(_Src(lambda i: payload), plan),
+                           policy, sleep=lambda s: None)
+    if offender_failures <= max_retries:
+        p, b = src.fn(5)                              # always heals
+        np.testing.assert_array_equal(p, payload[0])
+        np.testing.assert_array_equal(b, payload[1])
+    else:
+        with pytest.raises(ChunkFetchError) as ei:    # always exhausts
+            src.fn(5)
+        assert ei.value.chunk == 5
+        assert len(ei.value.history) == max_retries + 1
+    # Non-offender chunks pass through bit-identically either way.
+    p, b = src.fn(0)
+    np.testing.assert_array_equal(p, payload[0])
+    np.testing.assert_array_equal(b, payload[1])
+
+
+@pytest.mark.parametrize("max_retries,offender_failures", [
+    (0, 0), (0, 1), (4, 4), (4, 5), (2, 10 ** 6),
+])
+def test_offender_deterministic_twin(max_retries, offender_failures):
+    check_offender(max_retries, offender_failures)
+
+
+@settings(max_examples=60, deadline=None)
+@given(max_retries=st.integers(0, 6), offender_failures=st.integers(0, 10))
+def test_offender_props(max_retries, offender_failures):
+    check_offender(max_retries, offender_failures)
+
+
+def test_injection_replays_identically():
+    """Two faulty_source wrappers over the same plan make the same
+    decisions call-for-call (hash of (seed, chunk, occurrence) only)."""
+    payload = (np.zeros((2, 2), np.float32), np.zeros((2, 2), np.float32))
+    plan = FaultPlan(seed=7, drop=0.3, corrupt=0.3)
+
+    def trace():
+        src = faulty_source(_Src(lambda i: payload), plan)
+        out = []
+        for i in range(16):
+            for _ in range(3):                        # 3 occurrences each
+                try:
+                    p, _b = src.fn(i)
+                    out.append(p.tobytes())
+                except IOError:
+                    out.append(b"drop")
+        return out
+
+    assert trace() == trace()

@@ -1,0 +1,550 @@
+"""Fault-domain hardening: retries, chaos parity, containment, GC.
+
+The contracts under test (repro/core/faults.py + the serve layer,
+DESIGN.md §10):
+
+* the backoff schedule is deterministic, replayable, and actually slept
+  (the injectable ``sleep`` records it); exhaustion raises an error
+  naming the chunk and every attempt;
+* **chaos parity** — a streaming solve whose source drops, slows,
+  corrupts and repeat-offends under a :class:`FaultPlan`, absorbed by
+  the retry layer, is *bitwise identical* to the fault-free solve
+  (single-device and sharded virtual-slot paths);
+* failure containment — a refresh that exhausts its retry budget leaves
+  LIVE.json untouched, stamps FAILED.json, and a later re-drive against
+  healed storage publishes bitwise the clean record;
+* generation GC (``prune``) never deletes the live or pending
+  generation;
+* degraded serving — lookups that cannot regenerate their chunk answer
+  from the previous generation with an explicit ``stale=True``;
+* the DecisionService chunk cache is keyed by generation fingerprint —
+  flipping generations under a warm cache can never serve yesterday's
+  decisions (the regression this PR fixes);
+* checkpoint writes fsync data before the rename and the directory
+  after it (durability, not just atomicity).
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.core import SolverConfig
+from repro.core.faults import (
+    ChunkFetchError,
+    ChunkFetchTimeout,
+    ChunkIntegrityError,
+    FaultPlan,
+    FaultPolicy,
+    faulty_source,
+    fetch_with_retries,
+    policy_from_cfg,
+    resilient_source,
+)
+from repro.core.prefetch import solve_streaming_host
+from repro.serve import (
+    DecisionService,
+    RefreshEngine,
+    WorkloadSpec,
+    synthetic_source,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPEC = WorkloadSpec(seed=3, n=2048, k=8, chunk=256, q=2, tightness=0.4)
+CFG = SolverConfig(reduce="bucketed", max_iters=40)
+
+# The chaos knobs used throughout: rates must keep the per-attempt
+# failure probability modest because verify_refetch doubles the reads —
+# an attempt succeeds only when BOTH reads come back clean, so
+# P(success) = (1 - drop - corrupt)^2 per attempt and the retry budget
+# has to cover the compounding across thousands of fetches.
+CHAOS_CFG = CFG.replace(fetch_retries=8, fetch_backoff=1e-4,
+                        fetch_backoff_cap=1e-3, verify_refetch=True)
+CHAOS_PLAN = FaultPlan(seed=0, drop=0.08, slow=0.05, slow_s=0.002,
+                       corrupt=0.04, offenders=(1,), offender_failures=2)
+
+RESULT_FIELDS = ["lam", "tau", "iters", "r", "primal", "dual"]
+
+
+def _assert_bitwise(a, b):
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+    assert (a.fin_hist is None) == (b.fin_hist is None)
+    if a.fin_hist is not None:
+        for x, y in zip(a.fin_hist, b.fin_hist):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _flaky(fail_occurrences, payload=("p", "b")):
+    """A fetch fn failing on the listed occurrence numbers (0-based)."""
+    calls = {"n": 0}
+
+    def fn(i):
+        occ = calls["n"]
+        calls["n"] += 1
+        if occ in fail_occurrences:
+            raise IOError(f"transient occurrence {occ}")
+        return payload
+
+    return fn, calls
+
+
+# ---------------------------------------------------------------------------
+# fetch_with_retries: the retry loop itself.
+# ---------------------------------------------------------------------------
+
+def test_retries_sleep_exactly_the_schedule():
+    policy = FaultPolicy(max_retries=4, backoff_base=0.05)
+    fn, calls = _flaky({0, 1, 2})
+    slept = []
+    out = fetch_with_retries(fn, 7, policy, sleep=slept.append)
+    assert out == ("p", "b") and calls["n"] == 4
+    # The recorded sleeps are exactly the first attempts of the chunk's
+    # replayable schedule — no RNG, no wall clock.
+    assert slept == list(policy.schedule(7))[:3]
+
+
+def test_exhaustion_names_chunk_and_history():
+    policy = FaultPolicy(max_retries=2, backoff_base=1e-5)
+    fn, calls = _flaky(set(range(10)))
+    slept = []
+    with pytest.raises(ChunkFetchError) as ei:
+        fetch_with_retries(fn, 3, policy, sleep=slept.append)
+    e = ei.value
+    assert e.chunk == 3 and len(e.history) == 3 and calls["n"] == 3
+    assert "chunk 3" in str(e) and "3 attempt(s)" in str(e)
+    assert "transient occurrence 0" in str(e)
+    # The last attempt records no backoff (there is no retry after it).
+    assert e.history[-1][2] is None and len(slept) == 2
+
+
+def test_non_retryable_errors_propagate_immediately():
+    def fn(i):
+        raise ValueError("a bug, not a fault")
+
+    with pytest.raises(ValueError, match="a bug"):
+        fetch_with_retries(fn, 0, FaultPolicy(max_retries=5),
+                           sleep=lambda s: None)
+
+
+def test_on_retry_hook_observes_every_failure():
+    policy = FaultPolicy(max_retries=3, backoff_base=1e-5)
+    fn, _ = _flaky({0, 1})
+    seen = []
+    fetch_with_retries(fn, 5, policy, sleep=lambda s: None,
+                       on_retry=lambda *a: seen.append(a))
+    assert len(seen) == 2
+    for chunk, attempt, err, delay in seen:
+        assert chunk == 5 and isinstance(err, IOError) and delay > 0
+
+
+def test_timeout_is_retryable():
+    calls = {"n": 0}
+
+    def fn(i):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            time.sleep(0.5)
+        return ("p", "b")
+
+    policy = FaultPolicy(max_retries=2, backoff_base=1e-5, timeout=0.05)
+    seen = []
+    out = fetch_with_retries(fn, 0, policy, sleep=lambda s: None,
+                             on_retry=lambda c, a, e, d: seen.append(e))
+    assert out == ("p", "b")
+    assert len(seen) == 1 and isinstance(seen[0], ChunkFetchTimeout)
+
+
+def test_verify_detects_corruption_and_retries_past_it():
+    """An occurrence-keyed corrupt payload differs between the two
+    verified reads -> ChunkIntegrityError -> retried; once the injected
+    corruption stops, the clean double-read passes."""
+    src = synthetic_source(SPEC)
+    clean = src.fn(0)
+    calls = {"n": 0}
+
+    def fn(i):
+        occ = calls["n"]
+        calls["n"] += 1
+        if occ < 2:
+            p = np.array(clean[0], copy=True)
+            p.flat[0] += np.float32(occ + 1)   # different bytes each time
+            return p, clean[1]
+        return clean
+
+    policy = FaultPolicy(max_retries=3, backoff_base=1e-5)
+    out = fetch_with_retries(fn, 0, policy, verify=True,
+                             sleep=lambda s: None)
+    assert np.array_equal(out[0], clean[0])
+
+    # Without retries left, the mismatch is terminal and names the check.
+    calls["n"] = 0
+    with pytest.raises(ChunkFetchError, match="re-read"):
+        fetch_with_retries(fn, 0, FaultPolicy(max_retries=0),
+                           verify=True, sleep=lambda s: None)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="max_retries"):
+        FaultPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="jitter"):
+        FaultPolicy(jitter=1.0)
+    with pytest.raises(ValueError, match="monotone"):
+        FaultPolicy(backoff_growth=1.1, jitter=0.25)
+    with pytest.raises(ValueError, match="attempt is 1-based"):
+        FaultPolicy().backoff(0, 0)
+    with pytest.raises(ValueError, match="summing"):
+        FaultPlan(drop=0.7, corrupt=0.4)
+
+
+def test_policy_from_cfg_gates_wrapping():
+    assert policy_from_cfg(CFG) is None
+    pol = policy_from_cfg(CHAOS_CFG)
+    assert pol.max_retries == 8 and pol.timeout == 0.0
+    # verify alone still needs the wrapper (retries may be 0).
+    assert policy_from_cfg(CFG.replace(verify_refetch=True)) is not None
+    assert policy_from_cfg(CFG.replace(fetch_timeout=0.1)) is not None
+
+
+# ---------------------------------------------------------------------------
+# Chaos parity: the key invariant. Faults absorbed -> bitwise the clean solve.
+# ---------------------------------------------------------------------------
+
+def test_chaos_solve_bitwise_equals_clean_solve():
+    clean = solve_streaming_host(synthetic_source(SPEC), CFG, q=SPEC.q)
+    chaotic = solve_streaming_host(
+        faulty_source(synthetic_source(SPEC), CHAOS_PLAN),
+        CHAOS_CFG, q=SPEC.q)
+    _assert_bitwise(chaotic, clean)
+
+
+def test_chaos_solve_bitwise_sharded_slots():
+    """Same invariant under the sharded virtual-slot runtime (threaded
+    producers fetching through the retry layer). Slot count changes the
+    accumulation grouping, so clean and chaotic must run the SAME
+    slots."""
+    mesh = jax.make_mesh((1,), ("users",))
+    clean = solve_streaming_host(synthetic_source(SPEC), CFG, q=SPEC.q,
+                                 mesh=mesh, slots=4)
+    chaotic = solve_streaming_host(
+        faulty_source(synthetic_source(SPEC), CHAOS_PLAN),
+        CHAOS_CFG, q=SPEC.q, mesh=mesh, slots=4)
+    _assert_bitwise(chaotic, clean)
+
+
+def test_timeout_retry_path_bitwise():
+    """A chunk that hangs past the per-fetch timeout once is abandoned,
+    retried, and the solve is still bitwise clean."""
+    src = synthetic_source(SPEC)
+    inner = src.fn
+    calls = {"n": 0}
+
+    def hang_once(i):
+        if int(i) == 2:
+            calls["n"] += 1
+            if calls["n"] == 1:
+                time.sleep(0.5)
+        return inner(i)
+
+    cfg = CFG.replace(fetch_retries=3, fetch_backoff=1e-4,
+                      fetch_backoff_cap=1e-3, fetch_timeout=0.1)
+    clean = solve_streaming_host(synthetic_source(SPEC), CFG, q=SPEC.q)
+    got = solve_streaming_host(src._replace(fn=hang_once), cfg, q=SPEC.q)
+    assert calls["n"] >= 2           # the timeout really fired + retried
+    _assert_bitwise(got, clean)
+
+
+def test_exhaustion_in_solve_names_the_chunk():
+    plan = FaultPlan(seed=0, offenders=(3,), offender_failures=10 ** 6)
+    cfg = CFG.replace(fetch_retries=2, fetch_backoff=1e-5,
+                      fetch_backoff_cap=1e-4)
+    with pytest.raises(ChunkFetchError, match="chunk 3") as ei:
+        solve_streaming_host(faulty_source(synthetic_source(SPEC), plan),
+                             cfg, q=SPEC.q)
+    assert ei.value.chunk == 3 and len(ei.value.history) == 3
+
+
+def test_resilient_source_composes_over_faulty():
+    """The chaos sandwich: faults injected below, retries above, clean
+    bytes out — chunk-for-chunk, not just end-to-end."""
+    clean = synthetic_source(SPEC)
+    wrapped = resilient_source(
+        faulty_source(clean, CHAOS_PLAN),
+        policy_from_cfg(CHAOS_CFG), verify=True, sleep=lambda s: None)
+    for i in range(-(-clean.n // clean.chunk)):
+        want, got = clean.fn(i), wrapped.fn(i)
+        np.testing.assert_array_equal(got[0], want[0])
+        np.testing.assert_array_equal(got[1], want[1])
+
+
+# ---------------------------------------------------------------------------
+# Failure containment: FAILED.json, LIVE untouched, re-drive heals.
+# ---------------------------------------------------------------------------
+
+def _offender_factory(plan):
+    def make(spec):
+        return faulty_source(synthetic_source(spec), plan)
+
+    return make
+
+
+def test_failed_refresh_contained_and_redriven(tmp_path):
+    ref_root = tmp_path / "ref"
+    era = RefreshEngine(ref_root, SPEC, cfg=CFG)
+    era.refresh()
+    ref = era.refresh(budget_scale=0.9)
+
+    root = tmp_path / "faulty"
+    eng = RefreshEngine(root, SPEC, cfg=CFG)
+    eng.refresh()
+
+    # gen 1's solve exhausts its retries on a permanently-dead chunk.
+    dead = FaultPlan(seed=0, offenders=(5,), offender_failures=10 ** 6)
+    cfg_retry = CFG.replace(fetch_retries=2, fetch_backoff=1e-5,
+                            fetch_backoff_cap=1e-4)
+    broken = RefreshEngine(root, SPEC, make_source=_offender_factory(dead),
+                           cfg=cfg_retry)
+    with pytest.raises(ChunkFetchError, match="chunk 5"):
+        broken.refresh(budget_scale=0.9)
+
+    # Containment: the previous generation still serves; the failure is
+    # stamped with the chunk and attempt history.
+    assert eng.live().gen == 0
+    stamp = eng.failed()
+    assert stamp is not None and stamp["chunk"] == 5
+    assert stamp["attempts"] == 3 and stamp["gen"] == 1
+    assert len(stamp["history"]) == 3
+    # Lookups through the engine keep answering from gen 0.
+    assert eng.decision_service().decide(0).shape == (SPEC.k,)
+
+    # Storage heals (same spec, clean source): the SAME refresh re-drives
+    # the pending generation, clears the stamp, publishes bitwise.
+    healed = RefreshEngine(root, SPEC, cfg=CFG).refresh(budget_scale=0.9)
+    _assert_bitwise(healed, ref)
+    assert eng.live().gen == 1 and eng.failed() is None
+    assert not (eng._gen_dir(1) / "FAILED.json").exists()
+
+
+def test_discard_pending_frees_the_generation_id(tmp_path):
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    eng.refresh()
+    dead = FaultPlan(seed=0, offenders=(0,), offender_failures=10 ** 6)
+    broken = RefreshEngine(tmp_path, SPEC,
+                           make_source=_offender_factory(dead),
+                           cfg=CFG.replace(fetch_retries=1,
+                                           fetch_backoff=1e-5))
+    with pytest.raises(ChunkFetchError):
+        broken.refresh(budget_scale=0.9)
+    assert eng.failed() is not None
+    assert eng.discard_pending() == 1
+    assert eng._pending() is None and eng.failed() is None
+    # The id is claimable afresh, with different deltas this time.
+    assert eng.refresh(budget_scale=1.1).gen == 1
+    assert eng.discard_pending() is None
+
+
+# ---------------------------------------------------------------------------
+# Generation GC: prune never removes live or pending.
+# ---------------------------------------------------------------------------
+
+def test_prune_keeps_newest_and_never_live(tmp_path):
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    for scale in [1.0, 0.95, 0.9, 0.85]:
+        eng.refresh(budget_scale=scale)
+    assert eng.generation_ids() == [0, 1, 2, 3]
+    removed = eng.prune(keep=2)
+    assert removed == [0, 1] and eng.generation_ids() == [2, 3]
+    assert eng.live().gen == 3
+    with pytest.raises(ValueError, match="keep >= 1"):
+        eng.prune(keep=0)
+    with pytest.raises(ValueError, match="keep >= 1"):
+        eng.prune()                      # engine has keep=None
+
+
+def test_auto_prune_after_refresh(tmp_path):
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG, keep=2)
+    for scale in [1.0, 0.95, 0.9, 0.85]:
+        eng.refresh(budget_scale=scale)
+    assert eng.generation_ids() == [2, 3] and eng.live().gen == 3
+    with pytest.raises(ValueError, match="keep must be >= 1"):
+        RefreshEngine(tmp_path, SPEC, cfg=CFG, keep=0)
+
+
+def test_prune_never_removes_pending(tmp_path):
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    eng.refresh()
+    eng.refresh(budget_scale=0.95)
+    dead = FaultPlan(seed=0, offenders=(0,), offender_failures=10 ** 6)
+    broken = RefreshEngine(tmp_path, SPEC,
+                           make_source=_offender_factory(dead),
+                           cfg=CFG.replace(fetch_retries=1,
+                                           fetch_backoff=1e-5))
+    with pytest.raises(ChunkFetchError):
+        broken.refresh(budget_scale=0.9)          # gen 2 pending (failed)
+    removed = eng.prune(keep=1)
+    # gen 1 is live, gen 2 pending: both survive; only gen 0 goes.
+    assert removed == [0]
+    assert eng.generation_ids() == [1, 2]
+    assert eng.live().gen == 1 and eng._pending()[0] == 2
+    # The pending generation is still re-drivable after the sweep.
+    healed = RefreshEngine(tmp_path, SPEC, cfg=CFG).recover()
+    assert healed.gen == 2 and eng.live().gen == 2
+
+
+# ---------------------------------------------------------------------------
+# Degraded serving: stale answers beat no answers, and say so.
+# ---------------------------------------------------------------------------
+
+def _two_generations(tmp_path):
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    g0 = eng.refresh()
+    g1 = eng.refresh(budget_scale=0.7)   # big delta: decisions differ
+    return eng, g0, g1
+
+
+def test_degraded_lookup_serves_previous_generation(tmp_path):
+    eng, g0, g1 = _two_generations(tmp_path)
+
+    # The live generation's storage is dead for every chunk; the
+    # fallback (gen 0) is healthy.
+    dead = FaultPlan(seed=0, offenders=tuple(range(8)),
+                     offender_failures=10 ** 6)
+
+    def make(spec):
+        src = synthetic_source(spec)
+        return faulty_source(src, dead) if spec == g1.spec else src
+
+    cfg_retry = CFG.replace(fetch_retries=1, fetch_backoff=1e-5,
+                            fetch_backoff_cap=1e-4)
+    svc = RefreshEngine(tmp_path, SPEC, make_source=make,
+                        cfg=cfg_retry).decision_service()
+    res = svc.lookup(17)
+    assert res.stale and res.gen == 0
+    # The stale answer is gen 0's decision, bitwise.
+    want = DecisionService(synthetic_source(g0.spec), g0).decide(17)
+    np.testing.assert_array_equal(res.x, want)
+    # decide/decide_batch degrade the same way (per-user).
+    np.testing.assert_array_equal(svc.decide(17), want)
+    h = svc.health()
+    assert h["degraded"] and h["stale_serves"] >= 2
+    assert h["fetch_failures"] >= 2 and h["retries"] >= 2
+    assert h["generation"] == 1 and h["fallback_generation"] == 0
+
+
+def test_degraded_lookup_without_fallback_raises(tmp_path):
+    eng, g0, g1 = _two_generations(tmp_path)
+    dead = FaultPlan(seed=0, offenders=tuple(range(8)),
+                     offender_failures=10 ** 6)
+    cfg_retry = CFG.replace(fetch_retries=1, fetch_backoff=1e-5)
+    svc = RefreshEngine(
+        tmp_path, SPEC, make_source=_offender_factory(dead),
+        cfg=cfg_retry).decision_service(fallback=False)
+    with pytest.raises(ChunkFetchError):
+        svc.lookup(17)
+    h = svc.health()
+    assert h["fetch_failures"] == 1 and h["stale_serves"] == 0
+    assert not h["degraded"] and h["fallback_generation"] is None
+
+
+def test_healthy_lookups_are_never_marked_stale(tmp_path):
+    eng, g0, g1 = _two_generations(tmp_path)
+    svc = eng.decision_service()
+    res = svc.lookup(17)
+    assert not res.stale and res.gen == 1
+    h = svc.health()
+    assert h["stale_serves"] == 0 and not h["degraded"]
+    assert h["fallback_generation"] == 0    # armed, just unused
+
+
+# ---------------------------------------------------------------------------
+# The cache-keying regression: generations flip under a warm cache.
+# ---------------------------------------------------------------------------
+
+def test_cache_keyed_by_generation_fingerprint(tmp_path):
+    """A service rebound to a new generation with a WARM cache must
+    answer from the new generation's multipliers — a chunk-index-only
+    cache key would serve yesterday's decisions here."""
+    eng, g0, g1 = _two_generations(tmp_path)
+    svc = DecisionService(synthetic_source(g0.spec), g0, cache_chunks=16)
+    users = np.arange(SPEC.n)
+    before = svc.decide_batch(users)          # warms every chunk
+    assert svc.stats["fills"] == 8
+
+    oracle = DecisionService(synthetic_source(g1.spec), g1).decide_batch(
+        users)
+    assert (before != oracle).any(), \
+        "degenerate scenario: both generations decide identically"
+
+    svc.rebind(synthetic_source(g1.spec), g1)
+    after = svc.decide_batch(users)
+    np.testing.assert_array_equal(after, oracle)
+    # The new generation filled its own entries; it never hit g0's.
+    assert svc.stats["fills"] == 16
+    # And the demoted generation's warm entries still answer for it
+    # (the degraded path reuses them for free).
+    assert svc.generation.gen == 1
+
+
+def test_engine_decision_service_tracks_pointer_flips(tmp_path):
+    """The engine hands out a service per generation; two services built
+    around a refresh disagree exactly where the oracle says they
+    should."""
+    eng = RefreshEngine(tmp_path, SPEC, cfg=CFG)
+    g0 = eng.refresh()
+    svc0 = eng.decision_service()
+    x0 = svc0.decide_batch(np.arange(256))
+    g1 = eng.refresh(budget_scale=0.7)
+    svc1 = eng.decision_service()
+    assert svc1.generation.gen == 1
+    x1 = svc1.decide_batch(np.arange(256))
+    oracle0 = DecisionService(synthetic_source(g0.spec), g0).decide_batch(
+        np.arange(256))
+    oracle1 = DecisionService(synthetic_source(g1.spec), g1).decide_batch(
+        np.arange(256))
+    np.testing.assert_array_equal(x0, oracle0)
+    np.testing.assert_array_equal(x1, oracle1)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint durability: fsync before the rename, directory after it.
+# ---------------------------------------------------------------------------
+
+def _counting(monkeypatch):
+    events = []
+    real_fsync, real_replace = os.fsync, os.replace
+    monkeypatch.setattr(
+        os, "fsync",
+        lambda fd: (events.append("fsync"), real_fsync(fd))[1])
+    monkeypatch.setattr(
+        os, "replace",
+        lambda a, b: (events.append("replace"), real_replace(a, b))[1])
+    return events
+
+
+def test_save_fsyncs_data_before_rename_and_dir_after(tmp_path,
+                                                      monkeypatch):
+    events = _counting(monkeypatch)
+    tree = {"a": np.arange(4, dtype=np.float32),
+            "b": np.ones((2, 2), np.float32)}
+    ckpt.save(tmp_path, 0, tree)
+    assert "replace" in events
+    ri = events.index("replace")
+    # 2 leaves + manifest + tmp-dir fsync land before the rename...
+    assert events[:ri].count("fsync") >= 4
+    # ...and the parent directory is fsynced after it.
+    assert "fsync" in events[ri + 1:]
+
+
+def test_write_json_fsyncs_before_and_after_flip(tmp_path, monkeypatch):
+    events = _counting(monkeypatch)
+    ckpt.write_json(tmp_path, "LIVE.json", {"gen": 1})
+    ri = events.index("replace")
+    assert events[:ri].count("fsync") >= 1
+    assert "fsync" in events[ri + 1:]
+    assert ckpt.read_json(tmp_path, "LIVE.json") == {"gen": 1}
