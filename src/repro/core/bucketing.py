@@ -23,6 +23,7 @@ import jax.numpy as jnp
 __all__ = [
     "make_edges",
     "bucket_histogram",
+    "hist_crossings",
     "threshold_from_hist",
     "exact_threshold",
 ]
@@ -75,6 +76,25 @@ def bucket_histogram(v1, v2, edges, init=None):
     return hist.reshape(k, nb)
 
 
+def hist_crossings(hist, budgets):
+    """The budget-crossing structure of a bucketed histogram.
+
+    Returns ``(rev, cum_above, in_bucket)``: the reversed cumulative
+    sums (``rev[:, j]`` = mass in buckets >= j), the mass strictly above
+    each bucket, and the per-bucket crossing mask (feasible above,
+    infeasible including). Factored out of :func:`threshold_from_hist`
+    so active-set screening (core/screening.py) can test "does every
+    knapsack cross in a bucket >= 1" with the *exact* float ops the
+    threshold recovery uses — the screened-histogram trust check is only
+    sound because both run this same f32 chain.
+    """
+    rev = jnp.cumsum(hist[:, ::-1], axis=-1)[:, ::-1]
+    cum_above = rev - hist                                  # (K, nb)
+    feasible = cum_above <= budgets[:, None]
+    in_bucket = feasible & (rev > budgets[:, None])
+    return rev, cum_above, in_bucket
+
+
 def threshold_from_hist(hist, edges, budgets, top=None):
     """Recover lam_k^{t+1} = minimal v with sum_{v1 >= v} v2 <= B_k.
 
@@ -89,11 +109,8 @@ def threshold_from_hist(hist, edges, budgets, top=None):
     if top is None:
         top = edges[:, -1]
     # cum_above[j] = mass in buckets strictly above bucket j.
-    rev = jnp.cumsum(hist[:, ::-1], axis=-1)[:, ::-1]
-    cum_above = rev - hist                                  # (K, nb)
+    rev, cum_above, in_bucket = hist_crossings(hist, budgets)
     total = rev[:, 0]
-    feasible = cum_above <= budgets[:, None]
-    in_bucket = feasible & (rev > budgets[:, None])
     # Crossing bucket: the highest bucket where the budget line is crossed.
     # (feasible above it, infeasible including it.)
     any_cross = jnp.any(in_bucket, axis=-1)

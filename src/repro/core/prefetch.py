@@ -103,6 +103,7 @@ from .postprocess import (
     threshold_and_removed,
     threshold_from_removable_hist,
 )
+from .screening import HostScreen, crossing_trusted
 from .solver import damped_multiplier_step, scd_chunk_accumulate, solve
 from .sparse_scd import select_sparse
 from .types import SolverConfig, SparseKP
@@ -248,7 +249,7 @@ def _put_chunk(source, i, dtype):
 
 
 def _epoch(source, step, state, extra, dtype, double_buffer,
-           start=0, on_step=None):
+           start=0, on_step=None, indices=None):
     """One pass over chunks [start, c): ``state = step(state, p, b, *extra)``.
 
     Double-buffered mode dispatches the step (async) and only then
@@ -259,10 +260,14 @@ def _epoch(source, step, state, extra, dtype, double_buffer,
     and is kept as the benchmark baseline. ``on_step(i, state)``, when
     given, observes the post-chunk-i state (the checkpoint hook; reading
     it synchronizes, which is the measured checkpoint overhead).
+    ``indices`` overrides the index range with an explicit ascending
+    chunk list — the active-set screening pass (core/screening.py)
+    streams only surviving chunks through exactly this loop.
     """
     c = _num_chunks(source.n, source.chunk)
+    idxs = list(range(start, c)) if indices is None else list(indices)
     if not double_buffer:
-        for i in range(start, c):
+        for i in idxs:
             cur = _put_chunk(source, i, dtype)
             jax.block_until_ready(cur)
             state = step(state, *cur, *extra)
@@ -270,17 +275,30 @@ def _epoch(source, step, state, extra, dtype, double_buffer,
             if on_step is not None:
                 on_step(i, state)
         return state
-    if start >= c:
+    if not idxs:
         return state
-    nxt = _put_chunk(source, start, dtype)
-    for i in range(start, c):
+    nxt = _put_chunk(source, idxs[0], dtype)
+    for t, i in enumerate(idxs):
         cur, nxt = nxt, None
         state = step(state, *cur, *extra)
-        if i + 1 < c:
-            nxt = _put_chunk(source, i + 1, dtype)
+        if t + 1 < len(idxs):
+            nxt = _put_chunk(source, idxs[t + 1], dtype)
         if on_step is not None:
             on_step(i, state)
     return state
+
+
+def _observing_source(source, scr, base=0):
+    """Wrap a source so every fetched chunk also records its screening
+    certificate (:meth:`HostScreen.note_bound`). The bound is computed
+    from exactly the bytes the accumulate consumes — after the fault
+    layer's retries — so a certificate always describes the data that
+    actually entered the histogram."""
+    def fn(i):
+        p, b = source.fn(i)
+        scr.note_bound(base + i, p, b)
+        return p, b
+    return source._replace(fn=fn)
 
 
 def _presolve_host(source, lam0, q, cfg):
@@ -333,26 +351,54 @@ _FIN_KEYS = ["fin_r", "fin_primal", "fin_dual", "fin_lo", "fin_hi",
              "fin_ch", "fin_gh"]
 
 
+# The SolverConfig fields whose values steer the multiplier trajectory
+# or the finalize arithmetic: they are hashed (in this order — the byte
+# layout is load-bearing for existing checkpoints) into the resume-state
+# fingerprint. ``dtype`` is hashed too, as ``str(cfg.dtype)``.
+_FINGERPRINT_CFG_FIELDS = (
+    "algo", "cd_mode", "reduce", "tol", "cd_damping", "dd_lr",
+    "bucket_half", "bucket_delta", "bucket_growth", "presolve_samples",
+    "partial_fraction", "stream_finalize", "profit_buckets",
+    "profit_ladder_lo", "profit_ladder_hi", "use_kernels", "kernel_tile",
+    "postprocess",
+)
+
+# Fields deliberately EXCLUDED from the fingerprint: changing any of
+# them across a restart is legitimate because none of them alters the
+# accepted multiplier trajectory or the finalize results — iteration
+# budget / save cadence / retention, analysis sampling, the fault-retry
+# policy, the resident-solver chunking (ignored when streaming), and
+# active-set screening (trajectory-neutral by construction — a resumed
+# solve rebuilds its screening state from all-active; DESIGN.md §11).
+# Every SolverConfig field must appear in exactly one of these two sets
+# (tests/test_fingerprint_fields.py enumerates the dataclass and fails
+# on a field that is neither fingerprinted nor explicitly exempted).
+FINGERPRINT_EXEMPT_FIELDS = frozenset({
+    "max_iters", "metrics_every", "record_history",
+    "checkpoint_every", "checkpoint_keep",
+    "fetch_retries", "fetch_backoff", "fetch_backoff_growth",
+    "fetch_backoff_cap", "fetch_jitter", "fetch_timeout",
+    "verify_refetch",
+    "chunk_size",
+    "screening", "screening_floor",
+})
+
+
 def _fingerprint(source, cfg, q, lam_init):
     """Identity hash of (instance, solver arithmetic): workload shape,
     budgets bytes, the warm-start multipliers, the bytes of chunk 0,
-    and every cfg field that steers the trajectory. Saved in the resume
-    state; a mismatch on resume means the checkpoint belongs to a
-    different solve and is refused.
-    ``max_iters``/``checkpoint_every``/``metrics_every`` are deliberately
-    excluded — extending the iteration budget or changing the save
-    cadence across a restart is legitimate.
+    and every cfg field that steers the trajectory
+    (``_FINGERPRINT_CFG_FIELDS``). Saved in the resume state; a mismatch
+    on resume means the checkpoint belongs to a different solve and is
+    refused. ``FINGERPRINT_EXEMPT_FIELDS`` are deliberately excluded —
+    extending the iteration budget, changing the save cadence or fault
+    policy, or toggling screening across a restart is legitimate.
     """
     h = hashlib.sha256()
-    h.update(repr((source.n, source.k, source.chunk, int(q),
-                   cfg.algo, cfg.cd_mode, cfg.reduce, cfg.tol,
-                   cfg.cd_damping, cfg.dd_lr, cfg.bucket_half,
-                   cfg.bucket_delta, cfg.bucket_growth,
-                   cfg.presolve_samples, cfg.partial_fraction,
-                   cfg.stream_finalize, cfg.profit_buckets,
-                   cfg.profit_ladder_lo, cfg.profit_ladder_hi,
-                   cfg.use_kernels, cfg.kernel_tile, cfg.postprocess,
-                   str(cfg.dtype))).encode())
+    h.update(repr(
+        (source.n, source.k, source.chunk, int(q))
+        + tuple(getattr(cfg, f) for f in _FINGERPRINT_CFG_FIELDS)
+        + (str(cfg.dtype),)).encode())
     h.update(np.asarray(source.budgets, np.float32).tobytes())
     h.update(np.asarray(lam_init, np.float32).tobytes())
     p0, b0 = source.fn(0)
@@ -484,6 +530,17 @@ def _jit_steps(cfg, q):
         return damped_multiplier_step(lam, dprev, prop, cfg)
 
     @jax.jit
+    def scd_tail_scr(hist, top, lam, dprev, budgets, edges):
+        # The screened-iteration tail: same threshold + damped step,
+        # plus the crossing guard — computed in the SAME compiled
+        # program, so the guard's in_bucket tensor is (CSE) the one the
+        # threshold recovery selects from: trusted here *means* the
+        # accepted step never read bucket 0 (core/screening.py §3).
+        prop = threshold_from_hist(hist, edges, budgets, top)
+        out = damped_multiplier_step(lam, dprev, prop, cfg)
+        return out + (crossing_trusted(hist, budgets),)
+
+    @jax.jit
     def dd_tail(r, lam, dprev, budgets):
         prop = jnp.maximum(lam + cfg.dd_lr * (r - budgets), 0.0)
         return damped_multiplier_step(lam, dprev, prop, cfg)
@@ -535,6 +592,7 @@ def _jit_steps(cfg, q):
                 primal2 + jnp.sum(jnp.where(x, p_c, 0.0)))
 
     return {"dd_step": dd_step, "scd_step": scd_step, "scd_tail": scd_tail,
+            "scd_tail_scr": scd_tail_scr,
             "dd_tail": dd_tail, "fused_step": fused_step,
             "metrics_step": metrics_step, "metrics_tail": metrics_tail,
             "hist_step": hist_step, "apply_step": apply_step,
@@ -658,6 +716,20 @@ def _jit_steps_sharded(cfg, q, mesh, spd):
         return damped_multiplier_step(lam, dprev, prop, cfg)
 
     @jax.jit
+    def scd_combine_scr(hist, top, lam, dprev, budgets, edges):
+        # Screened-iteration combine: scd_combine's fold + threshold +
+        # damped step with the bucket->=1 crossing guard in the same
+        # program (see _jit_steps.scd_tail_scr).
+        if cfg.use_kernels and cfg.partial_fraction < 1.0:
+            hist = hist * (jnp.asarray(keep_np)[:, None, None]
+                           * jnp.float32(scale_np))
+        h = ordered_fold(hist)
+        t = jnp.max(top, axis=0)
+        prop = threshold_from_hist(h, edges, budgets, t)
+        out = damped_multiplier_step(lam, dprev, prop, cfg)
+        return out + (crossing_trusted(h, budgets),)
+
+    @jax.jit
     def dd_combine(r, lam, dprev, budgets):
         rk = ordered_fold(r * jnp.asarray(keep_np)[:, None])
         rk = rk * jnp.float32(scale_np)
@@ -689,6 +761,7 @@ def _jit_steps_sharded(cfg, q, mesh, spd):
 
     return {"scd_step": scd_step, "dd_step": dd_step, "fin_step": fin_step,
             "metrics_step": metrics_step, "scd_combine": scd_combine,
+            "scd_combine_scr": scd_combine_scr,
             "dd_combine": dd_combine, "fin_combine": fin_combine,
             "metrics_combine": metrics_combine, "pedges": pedges,
             "keep_np": keep_np}
@@ -714,7 +787,9 @@ class _SingleRuntime:
         self.budgets = jnp.asarray(source.budgets, cfg.dtype)
         self.st = _jit_steps(cfg, q)
         self.fin_cols = _num_chunks(source.n, source.chunk)
+        self.real_c = self.fin_cols
         self.slots = 1
+        self.scr = None   # HostScreen, installed by the driver
 
     def iter_epoch(self, lam, dprev):
         st, cfg, src = self.st, self.cfg, self.source
@@ -724,11 +799,39 @@ class _SingleRuntime:
             return st["dd_tail"](r, lam, dprev, self.budgets)
         edges = make_edges(lam, cfg.bucket_delta, cfg.bucket_growth,
                            cfg.bucket_half)
+        if self.scr is not None:
+            return self._iter_epoch_screened(lam, dprev, edges)
         hist0 = jnp.zeros((src.k, edges.shape[-1] + 1), jnp.float32)
         top0 = jnp.full((src.k,), -jnp.inf, lam.dtype)
         hist, top = _epoch(src, st["scd_step"], (hist0, top0),
                            (lam, edges), self.dtype, self.double_buffer)
         return st["scd_tail"](hist, top, lam, dprev, self.budgets, edges)
+
+    def _iter_epoch_screened(self, lam, dprev, edges):
+        """One SCD epoch over the active chunk set only; the crossing
+        guard (core/screening.py §3) either certifies the screened
+        histogram or triggers one full unscreened pass."""
+        st, src, scr = self.st, self.source, self.scr
+        scr.begin_iter(np.asarray(lam))
+        idx = scr.active_indices()
+        obs = _observing_source(src, scr)
+
+        def run(over, indices=None):
+            hist0 = jnp.zeros((src.k, edges.shape[-1] + 1), jnp.float32)
+            top0 = jnp.full((src.k,), -jnp.inf, lam.dtype)
+            hist, top = _epoch(over, st["scd_step"], (hist0, top0),
+                               (lam, edges), self.dtype,
+                               self.double_buffer, indices=indices)
+            return st["scd_tail_scr"](hist, top, lam, dprev, self.budgets,
+                                      edges)
+
+        lam_n, d_n, moved, trusted = run(obs, indices=idx)
+        scr.record_streamed(len(idx))
+        if scr.any_retired() and not bool(trusted):
+            lam_n, d_n, moved, _ = run(src)
+            scr.record_streamed(self.real_c, fallback=True)
+        scr.retire()
+        return lam_n, d_n, moved
 
     def metrics_record(self, lam):
         out = _epoch(self.source, self.st["metrics_step"],
@@ -795,50 +898,76 @@ class _ShardedRuntime:
         self.slots = slots
         self.subs = sharded_source(source, slots)
         c = _num_chunks(source.n, source.chunk)
+        self.real_c = c
         self.cps = -(-c // slots)
         self.fin_cols = self.cps
+        self.scr = None   # HostScreen over slots*cps padded chunk slots
         spd = slots // mesh.devices.size
         self.st = _jit_steps_sharded(cfg, q, mesh, spd)
         self.slot_sh = NamedSharding(mesh, P(tuple(mesh.axis_names)))
         self.budgets = jnp.asarray(source.budgets, cfg.dtype)
         self.keep = jax.device_put(self.st["keep_np"], self.slot_sh)
 
-    def _produce(self, j):
+    def _produce(self, j, screen=False):
         # Same cfg.dtype cast as the single-device _put_chunk, so a
         # source producing wider arrays feeds both runtimes identically.
         dt = np.dtype(self.cfg.dtype)
-        ps, bs = zip(*(sub.fn(j) for sub in self.subs))
+        if not screen:
+            ps, bs = zip(*(sub.fn(j) for sub in self.subs))
+        else:
+            # Screened column: fetch only slots whose chunk (global slot
+            # index s*cps + j) is still active; retired slots are fed
+            # zeros — bitwise-neutral by the inert-row contract (their
+            # scatter-adds contribute +0.0 and their candidate values
+            # sit below ``max(top, edges[:, -1])``, screening.py §4).
+            scr, cps = self.scr, self.cps
+            zero = np.zeros((self.source.chunk, self.source.k), dt)
+            ps, bs = [], []
+            for s, sub in enumerate(self.subs):
+                g = s * cps + j
+                if scr.active[g]:
+                    p, b = sub.fn(j)
+                    scr.note_bound(g, p, b)
+                else:
+                    p = b = zero
+                ps.append(p)
+                bs.append(b)
         pb = np.ascontiguousarray(np.stack(ps), dtype=dt)
         bb = np.ascontiguousarray(np.stack(bs), dtype=dt)
         return (jax.device_put(pb, self.slot_sh),
                 jax.device_put(bb, self.slot_sh))
 
-    def _epoch_cols(self, step, state, extra, start=0, on_col=None):
+    def _epoch_cols(self, step, state, extra, start=0, on_col=None,
+                    indices=None, screen=False):
         """One pass over columns [start, cps): every slot advances one
-        chunk per column. Same double-buffering contract as ``_epoch``."""
+        chunk per column. Same double-buffering contract as ``_epoch``.
+        ``indices`` restricts the pass to an explicit ascending column
+        list (the screening path: columns whose slots are all retired
+        are skipped outright)."""
         cols = self.cps
+        idxs = list(range(start, cols)) if indices is None else list(indices)
 
         def call(state, cur):
             out = step(*state, *cur, *extra)
             return out if isinstance(out, tuple) else (out,)
 
         if not self.double_buffer:
-            for j in range(start, cols):
-                cur = self._produce(j)
+            for j in idxs:
+                cur = self._produce(j, screen)
                 jax.block_until_ready(cur)
                 state = call(state, cur)
                 jax.block_until_ready(state)
                 if on_col is not None:
                     on_col(j, state)
             return state
-        if start >= cols:
+        if not idxs:
             return state
-        nxt = self._produce(start)
-        for j in range(start, cols):
+        nxt = self._produce(idxs[0], screen)
+        for t, j in enumerate(idxs):
             cur, nxt = nxt, None
             state = call(state, cur)
-            if j + 1 < cols:
-                nxt = self._produce(j + 1)
+            if t + 1 < len(idxs):
+                nxt = self._produce(idxs[t + 1], screen)
             if on_col is not None:
                 on_col(j, state)
         return state
@@ -852,6 +981,8 @@ class _ShardedRuntime:
             return st["dd_combine"](np.asarray(r), lam, dprev, self.budgets)
         edges = make_edges(lam, cfg.bucket_delta, cfg.bucket_growth,
                            cfg.bucket_half)
+        if self.scr is not None:
+            return self._iter_epoch_screened(lam, dprev, edges)
         # The histogram is f32 by design (traced convention); top carries
         # the multiplier dtype.
         hist0 = jax.device_put(
@@ -861,6 +992,38 @@ class _ShardedRuntime:
                                      (lam, edges, self.keep))
         return st["scd_combine"](np.asarray(hist), np.asarray(top), lam,
                                  dprev, self.budgets, edges)
+
+    def _iter_epoch_screened(self, lam, dprev, edges):
+        """Screened SCD epoch: retired slots feed zeros, columns with no
+        active slot are skipped; the crossing guard runs on the folded
+        histogram inside the same program as the multiplier step."""
+        cfg, st, S, k = self.cfg, self.st, self.slots, self.source.k
+        dt = np.dtype(cfg.dtype)
+        scr, cps = self.scr, self.cps
+        scr.begin_iter(np.asarray(lam))
+        act = scr.active.reshape(S, cps)
+        cols = [int(j) for j in np.flatnonzero(act.any(axis=0))]
+        streamed = int(np.count_nonzero(scr.active[:self.real_c]))
+
+        def run(indices=None, screen=False):
+            hist0 = jax.device_put(
+                np.zeros((S, k, edges.shape[-1] + 1), np.float32),
+                self.slot_sh)
+            top0 = jax.device_put(np.full((S, k), -np.inf, dt),
+                                  self.slot_sh)
+            hist, top = self._epoch_cols(st["scd_step"], (hist0, top0),
+                                         (lam, edges, self.keep),
+                                         indices=indices, screen=screen)
+            return st["scd_combine_scr"](np.asarray(hist), np.asarray(top),
+                                         lam, dprev, self.budgets, edges)
+
+        lam_n, d_n, moved, trusted = run(indices=cols, screen=True)
+        scr.record_streamed(streamed)
+        if scr.any_retired() and not bool(trusted):
+            lam_n, d_n, moved, _ = run()
+            scr.record_streamed(self.real_c, fallback=True)
+        scr.retire()
+        return lam_n, d_n, moved
 
     def metrics_record(self, lam):
         init = _fin_zeros_np(self.slots, self.source.k, 0, False,
@@ -903,7 +1066,8 @@ def solve_streaming_host(source: HostChunkSource,
                          cfg: SolverConfig = SolverConfig(), q: int = 1,
                          lam0=None, double_buffer: bool = True, mesh=None,
                          slots: Optional[int] = None, checkpoint_dir=None,
-                         resume_from=None) -> StreamResult:
+                         resume_from=None,
+                         screen_init: Optional[dict] = None) -> StreamResult:
     """Solve a host-fed sparse GKP, chunks uploaded as they are consumed.
 
     The host-side twin of ``chunked.solve_streaming``: the iteration
@@ -1039,6 +1203,16 @@ def solve_streaming_host(source: HostChunkSource,
     else:
         lam = _presolve_host(source, lam, q, cfg)
 
+    scr = None
+    if cfg.screening:   # _validate_stream_cfg pinned algo/cd_mode/reduce
+        # Screening state is rebuilt fresh on every (re)start — it is
+        # not part of the checkpoint (see HostScreen: it never steers
+        # the trajectory). ``screen_init`` seeds it from a previous
+        # solve's stats for the serving layer's delta refresh.
+        scr = HostScreen(rt.slots * rt.fin_cols, source.k, cfg,
+                         np.asarray(lam), seed=screen_init)
+        rt.scr = scr
+
     rows = [] if cfg.record_history else None
     every = max(cfg.metrics_every, 1)
     fin_zeros = functools.partial(_fin_zeros_np, S, source.k,
@@ -1081,8 +1255,10 @@ def solve_streaming_host(source: HostChunkSource,
             rows.append(rows[-1])
         history = {k: jnp.stack([r[k] for r in rows]) for k in rows[0]}
 
+    scr_stats = scr.stats() if scr is not None else None
     if cfg.stream_finalize == "legacy":
-        return rt.legacy_result(lam, iters)._replace(history=history)
+        return rt.legacy_result(lam, iters)._replace(history=history,
+                                                     screen=scr_stats)
 
     on_col = None
     if checkpointing:
@@ -1095,5 +1271,6 @@ def solve_streaming_host(source: HostChunkSource,
 
     carry = rt.fin_init() if fin_carry is None else fin_carry
     carry = rt.fin_run(carry, lam, cursor, on_col)
-    return rt.fin_result(carry, lam, iters)._replace(history=history)
+    return rt.fin_result(carry, lam, iters)._replace(history=history,
+                                                     screen=scr_stats)
 

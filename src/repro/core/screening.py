@@ -1,0 +1,234 @@
+"""Safe λ-interval active-set screening for the streamed SCD solve.
+
+Every SCD iteration streams all n items, yet most items stop mattering
+long before convergence: their candidate thresholds sit so far below the
+multiplier that they can never again influence the bucketed reduce. This
+module retires whole *chunks* of such items from the iteration passes —
+the big algorithmic lever the screening literature (Jooken et al.
+instance features; Li et al. large-scale 0-1 KP) grounds — while keeping
+the multiplier trajectory, and therefore the final picked set,
+**bitwise identical** to the unscreened solve. The unscreened solve is
+the oracle; screening is only ever a proof that streaming less changes
+nothing.
+
+The safety argument (DESIGN.md §11 walks the float-level details):
+
+1. **A λ-independent per-item bound.** The sparse candidate threshold is
+   ``v1 = (p - pbar(λ)) / b`` with ``pbar(λ) >= 0`` (Alg 5 clamps the
+   adjusted profits at zero before taking order statistics), so
+   ``v1 <= p / b`` for every λ — IEEE rounding is monotone, so the
+   f32-evaluated bound dominates the f32-evaluated ``v1``. The per-chunk
+   certificate :func:`chunk_bound` is the row-max of that ratio: one
+   number per knapsack, computed once, valid forever (the data never
+   changes; only λ does).
+
+2. **A λ floor makes the bound a bucket-0 certificate.** The bucket
+   ladder's lowest edge ``e0(λ)`` (``make_edges(...)[:, 0]``) is
+   monotone non-decreasing in λ (an f32 subtraction of a constant).
+   Maintain a floor ``lam_lo`` with ``λ >= lam_lo`` checked every
+   iteration; then ``chunk_bound <= e0(lam_lo) <= e0(λ)`` proves every
+   item of the chunk bins into bucket 0 (``searchsorted`` left: index 0
+   iff ``v1 <= edges[0]``) at every future iteration. Skipping the chunk
+   therefore leaves **every histogram bucket >= 1 bit-identical** — the
+   scatter-adds that would have happened all target bucket 0, and the
+   remaining adds keep their relative order. If λ escapes below the
+   floor, every chunk is reactivated and the floor re-anchored (one
+   full-width iteration, still bitwise — a full pass is the unscreened
+   pass).
+
+3. **A per-iteration crossing guard covers bucket 0.** Bucket-0 mass
+   does leak into ``threshold_from_hist`` through two doors: the
+   ``total <= budgets`` early-out and a crossing that lands *in* bucket
+   0. Both are closed by checking — on the screened histogram, with the
+   exact float ops of ``threshold_from_hist`` via
+   :func:`repro.core.bucketing.hist_crossings` — that every knapsack has
+   a budget crossing in some bucket >= 1. Buckets >= 1 being
+   bit-identical, the crossing bucket, its interpolation inputs and the
+   ``total > budgets`` predicates then resolve identically in the
+   screened and unscreened programs (the reversed cumulative sums never
+   touch bucket 0 above index 0). When the guard fails, the iteration
+   falls back to one full unscreened pass — bitwise by construction.
+
+4. **The global max candidate is immune.** ``top`` only enters through
+   ``max(top, edges[:, -1])``; retired items satisfy
+   ``v1 <= e0 <= edges[:, -1]`` (and invalid rows carry ``v1 = -1``,
+   also below the top edge), so dropping them can never change that max.
+
+The finalize/metrics passes and :func:`~repro.core.chunked.
+decisions_chunk` always stream *all* chunks — the final (r, primal,
+dual, tau) and the exported decisions are full-pass quantities, which is
+what makes the screened solve's outputs field-for-field the oracle's.
+
+Both drivers share these helpers: the traced scan
+(``chunked.solve_streaming``) carries (active, bound, floor) through the
+``while_loop``; the host-fed driver (``prefetch.solve_streaming_host``)
+keeps them in a :class:`HostScreen` and simply never fetches retired
+chunks. :class:`HostScreen` state also seeds the serving layer's *delta
+refresh* (``repro.serve.engine``): chunks whose bytes are unchanged
+between generations inherit the parent generation's certificates and
+start retired.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .bucketing import hist_crossings, make_edges
+
+__all__ = ["chunk_bound", "crossing_trusted", "lowest_edges", "HostScreen"]
+
+
+def chunk_bound(p_c, b_c):
+    """λ-independent upper bound on a chunk's candidate thresholds.
+
+    (chunk, K) profits/costs -> (K,) f32: the row-max of ``p / b`` over
+    rows with ``b > 0`` (rows with ``b == 0`` — including the inert
+    ragged tail — never produce a valid candidate and bound to -inf).
+    Dominates the f32 ``candidates_sparse`` ``v1`` at every λ because
+    ``pbar >= 0`` and IEEE rounding is monotone.
+    """
+    safe = jnp.where(b_c > 0, b_c, jnp.ones_like(b_c))
+    ratio = jnp.where(b_c > 0, p_c / safe, -jnp.inf)
+    return jnp.max(ratio.astype(jnp.float32), axis=0)
+
+
+def crossing_trusted(hist, budgets):
+    """() bool: every knapsack's budget crossing lands in a bucket >= 1.
+
+    Computed with :func:`~repro.core.bucketing.hist_crossings` — the
+    exact reversed-cumsum / comparison floats ``threshold_from_hist``
+    uses — so "trusted" here means *provably* that the screened
+    histogram yields the bit-identical multiplier proposal: the chosen
+    crossing bucket, its interpolation inputs and the ``total > budgets``
+    predicates involve no bucket-0 quantity when a crossing exists above
+    bucket 0.
+    """
+    _, _, in_bucket = hist_crossings(hist, budgets)
+    return jnp.all(jnp.any(in_bucket[:, 1:], axis=-1))
+
+
+def lowest_edges(lam_lo, cfg):
+    """(K,) f32 lowest bucket edge at the floor, via ``make_edges`` itself.
+
+    Using the same op that builds the solve's ladder keeps the
+    certificate comparison exact: a chunk retired against
+    ``e0(lam_lo)`` bins into bucket 0 at every λ >= lam_lo because the
+    f32 edge is monotone in λ.
+    """
+    edges = make_edges(jnp.asarray(lam_lo, jnp.float32), cfg.bucket_delta,
+                       cfg.bucket_growth, cfg.bucket_half)
+    return np.asarray(edges[:, 0], np.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _np_bound(p, b):
+    return chunk_bound(p, b)
+
+
+class HostScreen:
+    """Active-set state for the host-fed driver (and the delta refresh).
+
+    Tracks, per global chunk index, whether the chunk is still streamed
+    (``active``), its λ-independent certificate (``bmax``) and the λ
+    floor the certificates were issued against (``lam_lo``). The driver
+    calls :meth:`begin_iter` before each iteration epoch (floor check —
+    an escaped λ reactivates everything), :meth:`note_bound` as chunks
+    are fetched, and :meth:`retire` after the multiplier step is
+    accepted. ``seed=`` warm-starts the state from a previous solve's
+    :meth:`stats` — the delta-refresh path: unchanged chunks inherit
+    their certificates and start retired; changed chunks start active
+    with an unknown (+inf) bound. Screening state is deliberately *not*
+    part of the checkpoint resume state: it never steers the trajectory,
+    so a resumed solve safely rebuilds it from all-active.
+    """
+
+    def __init__(self, c: int, k: int, cfg, lam0, seed: Optional[dict] = None):
+        self.cfg = cfg
+        self.c = c
+        self.active = np.ones((c,), bool)
+        self.bmax = np.full((c, k), np.inf, np.float32)
+        lam0 = np.asarray(lam0, np.float32)
+        self.lam_lo = (lam0 * np.float32(cfg.screening_floor)).astype(
+            np.float32)
+        if seed is not None:
+            m = min(c, int(np.asarray(seed["active"]).shape[0]))
+            self.active[:m] = np.asarray(seed["active"], bool)[:m]
+            self.bmax[:m] = np.asarray(seed["bmax"], np.float32)[:m]
+            changed = seed.get("changed")
+            if changed is not None:
+                ch = np.asarray(changed, bool)
+                mm = min(c, ch.shape[0])
+                self.active[:mm] |= ch[:mm]
+                self.bmax[:mm][ch[:mm]] = np.inf
+            # The floor must keep covering the inherited certificates:
+            # a seeded retired chunk was certified against
+            # ``e0(seed lam_lo)``, so the floor can never start *below*
+            # the seed's (``e0`` is monotone — a lower floor would let λ
+            # sink under the certified interval while the chunk stays
+            # retired). A warm start below the resulting floor is
+            # handled by the begin_iter escape check: everything
+            # reactivates and the floor re-anchors.
+            self.lam_lo = np.maximum(
+                self.lam_lo, np.asarray(seed["lam_lo"], np.float32))
+        self.resets = 0
+        self.fallbacks = 0
+        self.streamed = []          # chunks streamed per iteration epoch
+        self.seeded_active = int(self.active.sum())
+
+    def begin_iter(self, lam) -> bool:
+        """Floor check before an epoch; False means everything was
+        reactivated (λ escaped the certified interval)."""
+        lam = np.asarray(lam, np.float32)
+        ok = bool(np.all(lam >= self.lam_lo))
+        floor = (lam * np.float32(self.cfg.screening_floor)).astype(
+            np.float32)
+        if ok:
+            self.lam_lo = np.maximum(self.lam_lo, floor)
+        else:
+            self.active[:] = True
+            self.resets += 1
+            self.lam_lo = floor
+        return ok
+
+    def note_bound(self, i: int, p, b) -> None:
+        if np.isfinite(self.bmax[i]).all():
+            return
+        self.bmax[i] = np.asarray(
+            _np_bound(np.asarray(p, np.float32), np.asarray(b, np.float32)))
+
+    def active_indices(self):
+        return np.flatnonzero(self.active)
+
+    def any_retired(self) -> bool:
+        return not bool(self.active.all())
+
+    def record_streamed(self, n: int, fallback: bool = False) -> None:
+        if fallback:
+            self.fallbacks += 1
+            self.streamed[-1] += n
+        else:
+            self.streamed.append(int(n))
+
+    def retire(self) -> None:
+        """Retire every active chunk whose certificate clears the floor
+        edge for *all* knapsacks (the histogram is per-knapsack; a chunk
+        must be bucket-0 everywhere to be skippable)."""
+        e0 = lowest_edges(self.lam_lo, self.cfg)
+        can = np.all(self.bmax <= e0[None, :], axis=-1)
+        self.active &= ~can
+
+    def stats(self) -> dict:
+        return {
+            "active": self.active.copy(),
+            "bmax": self.bmax.copy(),
+            "lam_lo": self.lam_lo.copy(),
+            "resets": self.resets,
+            "fallbacks": self.fallbacks,
+            "streamed_chunks": np.asarray(self.streamed, np.int64),
+            "seeded_active": self.seeded_active,
+        }

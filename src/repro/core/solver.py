@@ -367,7 +367,7 @@ def damped_multiplier_step(lam, dprev, prop, cfg):
     return lam_new, delta, moved
 
 
-def iterate_multipliers(update, lam0, cfg, metrics_fn=None):
+def iterate_multipliers(update, lam0, cfg, metrics_fn=None, aux0=None):
     """Run the damped multiplier fixed-point iteration to convergence.
 
     ``update``: lam -> proposed lam (one Alg 2/4 iteration at lam).
@@ -394,7 +394,17 @@ def iterate_multipliers(update, lam0, cfg, metrics_fn=None):
     solve drivers, so their trajectories agree bit-for-bit given
     bit-identical updates.
 
-    Returns (lam, iters, history).
+    ``aux0``: optional pytree of auxiliary loop state the update owns
+    (active-set screening carries its survivor masks / bounds through
+    the loop this way). When given, ``update`` is called as
+    ``update(lam, aux) -> (prop, aux_new)`` and the aux is frozen — like
+    lam — once the solve converges (fixed-length scan mode keeps
+    stepping the frozen carry). The no-aux path below is byte-for-byte
+    the historical step function; the aux path is a separate closure so
+    existing traced programs keep their exact jaxpr.
+
+    Returns (lam, iters, history) — or (lam, iters, history, aux) when
+    ``aux0`` is given.
     """
     def step(carry, _):
         lam, dprev, it, done = carry
@@ -407,19 +417,36 @@ def iterate_multipliers(update, lam0, cfg, metrics_fn=None):
         rec = metrics_fn(lam_next, it_next) if cfg.record_history else None
         return (lam_next, d_next, it_next, done_next), rec
 
+    def step_aux(carry, _):
+        lam, dprev, it, done, aux = carry
+        prop, aux_new = update(lam, aux)
+        lam_new, delta, moved = damped_multiplier_step(lam, dprev, prop, cfg)
+        lam_next = jnp.where(done, lam, lam_new)
+        d_next = jnp.where(done, dprev, delta)
+        it_next = it + jnp.where(done, 0, 1).astype(jnp.int32)
+        done_next = done | ~moved
+        aux_next = jax.tree.map(
+            lambda a, b: jnp.where(done, a, b), aux, aux_new)
+        rec = metrics_fn(lam_next, it_next) if cfg.record_history else None
+        return (lam_next, d_next, it_next, done_next, aux_next), rec
+
     init = (lam0, jnp.zeros_like(lam0), jnp.int32(0), jnp.asarray(False))
+    body = step if aux0 is None else step_aux
+    if aux0 is not None:
+        init = init + (aux0,)
     if cfg.record_history:
-        (lam, _, iters, _), hist = jax.lax.scan(
-            step, init, None, length=cfg.max_iters
-        )
+        out, hist = jax.lax.scan(body, init, None, length=cfg.max_iters)
     else:
-        (lam, _, iters, _) = jax.lax.while_loop(
+        out = jax.lax.while_loop(
             lambda c: (c[2] < cfg.max_iters) & ~c[3],
-            lambda c: step(c, None)[0],
+            lambda c: body(c, None)[0],
             init,
         )
         hist = None
-    return lam, iters, hist
+    lam, iters = out[0], out[2]
+    if aux0 is None:
+        return lam, iters, hist
+    return lam, iters, hist, out[4]
 
 
 def _metrics(kp, lam, q, axis):

@@ -164,6 +164,20 @@ class SolverConfig:
     profit_buckets: int = 512
     profit_ladder_lo: float = 1e-6
     profit_ladder_hi: float = 1e6
+    # Safe λ-interval active-set screening (core/screening.py): retire
+    # chunks whose items provably bin below the bucket ladder for every
+    # remaining multiplier value, and skip them in subsequent iteration
+    # passes. The screened solve is bitwise-identical to the unscreened
+    # oracle (DESIGN.md §11); requires the sync-SCD bucketed streaming
+    # path. Excluded from the resume fingerprint like checkpoint_every:
+    # screening never steers the trajectory, so toggling it across a
+    # restart is legitimate.
+    screening: bool = False
+    # Floor protocol: each iteration certifies multipliers down to
+    # lam * screening_floor; a multiplier escaping below its floor
+    # reactivates every chunk for one full pass and re-anchors. Smaller
+    # values retire chunks earlier but survive larger downward swings.
+    screening_floor: float = 0.5
     # Use the Pallas kernels for the sparse map + histogram (TPU target;
     # interpret-mode on CPU — slow, used for integration testing).
     use_kernels: bool = False

@@ -123,6 +123,52 @@ def sparse_host_chunk_source(seed, n, k, chunk, q=1, tightness=0.5,
     return HostChunkSource(n=n, k=k, chunk=chunk, budgets=budgets, fn=fn)
 
 
+def banded_host_chunk_source(seed, n, k, chunk, q=1, tightness=0.5,
+                             band=0.05, period=8, b_lo=0.5):
+    """Ratio-banded host instance: the active-set screening workload.
+
+    Uniform-[0,1] profits over uniform-[0,1] costs give every chunk a
+    heavy-tailed max(p/b) — no chunk's certificate ever clears the
+    bucket ladder's lowest edge, so screening (core/screening.py) has
+    nothing to retire. Real serving traffic is not like that: most
+    cohorts' value ratios sit far below the marginal cohort's. This
+    generator models that structure while staying a pure function of
+    ``(seed, chunk index)``:
+
+    * costs are uniform on [b_lo, 1) — bounding every ratio by
+      ``p_scale / b_lo``;
+    * chunk ``i``'s profits are uniform on [0, band) — a cold cohort —
+      except every ``period``-th chunk, which is uniform on [0, 1): the
+      hot cohorts that keep the multipliers (and the crossing buckets)
+      up where the cold chunks' certificates clear the ladder.
+
+    With ``band=0.05, b_lo=0.5`` a cold chunk bounds at 0.1 while the
+    multipliers settle near the hot cohorts' marginal ratio (~1) —
+    cold chunks retire after the first epoch and the streamed volume
+    drops by roughly the cold fraction, all bitwise-identical to the
+    unscreened solve. Budget scaling matches the uniform generators
+    (mean cost is ``(b_lo + 1) / 2``).
+    """
+    import numpy as np
+
+    from ..core.prefetch import HostChunkSource
+
+    budgets = np.full((k,), tightness * n * q * ((b_lo + 1.0) / 2.0) / k,
+                      np.float32)
+
+    def fn(i):
+        rng = np.random.Generator(np.random.Philox(key=seed, counter=i))
+        scale = np.float32(1.0 if i % period == 0 else band)
+        p = rng.random((chunk, k), np.float32) * scale
+        b = np.float32(b_lo) + rng.random((chunk, k), np.float32) \
+            * np.float32(1.0 - b_lo)
+        live = ((i * chunk + np.arange(chunk)) < n)[:, None]
+        return np.where(live, p, 0.0).astype(np.float32), \
+            np.where(live, b, 0.0).astype(np.float32)
+
+    return HostChunkSource(n=n, k=k, chunk=chunk, budgets=budgets, fn=fn)
+
+
 def sparse_host_shard_sources(seed, n, k, chunk, slots, q=1, tightness=0.5,
                               b_high=1.0):
     """Per-slot host sources of one §6 instance: the sharded-feed twin.

@@ -16,6 +16,7 @@ from .bucket_hist import bucket_hist as _bucket_hist
 from .scd_candidates import scd_candidates as _scd_candidates
 from .scd_fused import scd_finalize_hist as _scd_finalize_hist
 from .scd_fused import scd_fused_hist as _scd_fused_hist
+from .screen_bound import screen_bound as _screen_bound
 
 _TILE_LADDER = (512, 256, 128)
 
@@ -72,6 +73,17 @@ def scd_fused_hist(p, b, lam, edges, q, use_pallas=True, **kw):
             p, b, lam, edges, q,
             hist_init=kw.get("hist_init"), top_init=kw.get("top_init"))
     return _scd_fused_hist(p, b, lam, edges, q, **kw)
+
+
+def screen_bound(p, b, use_pallas=True, **kw):
+    """Masked max-ratio accumulation: the (K,) per-chunk screening
+    certificate of core/screening.py (row-max of p/b over b > 0 rows;
+    masked rows bound to -inf). Bit-identical across the kernel and
+    oracle paths — f32 max carries no rounding."""
+    if not use_pallas:
+        from ..core.screening import chunk_bound
+        return chunk_bound(p, b)
+    return _screen_bound(p, b, **kw)
 
 
 def scd_finalize_hist(p, b, lam, pedges, q, use_pallas=True, **kw):

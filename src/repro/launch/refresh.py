@@ -270,6 +270,21 @@ def main():
                     help="run the scenario clean AND under injected "
                          "fetch faults; exit 1 unless every generation "
                          "is bitwise identical between the two")
+    ap.add_argument("--screening", action="store_true",
+                    help="active-set screening + delta refresh: retire "
+                         "provably-inert chunks, seed each generation's "
+                         "active set from the parent's certificates and "
+                         "re-stream only changed chunks (bitwise "
+                         "results; DESIGN.md §11)")
+    ap.add_argument("--screening-floor", type=float, default=0.5)
+    ap.add_argument("--band", type=float, default=0.0,
+                    help="ratio-banded workload (cold-cohort profit "
+                         "scale; 0 = uniform §6 generator). Screening "
+                         "retires nothing on the uniform workload — "
+                         "pair --screening with --band")
+    ap.add_argument("--bucket-half", type=int, default=24,
+                    help="bucket ladder half-width (smaller ladders "
+                         "tighten the screening certificate)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -277,9 +292,12 @@ def main():
         args.lookups = 256
     spec = WorkloadSpec(seed=args.seed, n=args.users, k=args.k,
                         chunk=args.chunk, q=args.q,
-                        tightness=args.tightness)
+                        tightness=args.tightness, band=args.band)
     cfg = SolverConfig(reduce="bucketed", max_iters=args.max_iters,
-                       checkpoint_every=args.checkpoint_every)
+                       checkpoint_every=args.checkpoint_every,
+                       screening=args.screening,
+                       screening_floor=args.screening_floor,
+                       bucket_half=args.bucket_half)
     ndev = jax.device_count()
     mesh = jax.make_mesh((ndev,), ("users",)) if ndev > 1 else None
     root = args.root or tempfile.mkdtemp(prefix="refresh_")

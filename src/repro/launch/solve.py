@@ -39,6 +39,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.paper_kp import WORKLOADS, KPWorkload
 from repro.core import SolverConfig, solve, solve_sharded
@@ -124,7 +125,7 @@ def run_streaming(workload: KPWorkload, cfg: SolverConfig, chunk: int,
         res = solve_streaming(src, cfg, q=workload.q, mesh=mesh)
     dt = time.time() - t0
     viol = float(jnp.max((res.r - src.budgets) / src.budgets))
-    return {
+    out = {
         "n_users": workload.n_users,
         "k": workload.k,
         "chunk_size": chunk,
@@ -135,6 +136,17 @@ def run_streaming(workload: KPWorkload, cfg: SolverConfig, chunk: int,
         "max_violation": viol,
         "wall_s": round(dt, 2),
     }
+    if getattr(res, "screen", None) is not None:
+        # Host driver: per-epoch streamed-chunk counts. Traced driver:
+        # per-iteration active-chunk counts (-1 rows = never reached).
+        if "streamed_chunks" in res.screen:
+            counts = np.asarray(res.screen["streamed_chunks"])
+        else:
+            ac = np.asarray(res.screen["active_chunks"])
+            counts = ac[ac >= 0]
+        out["screen_chunks_per_iter"] = counts.tolist()
+        out["screen_resets"] = int(np.asarray(res.screen["resets"]))
+    return out
 
 
 def main():
@@ -190,6 +202,16 @@ def main():
                          "one per device); fixed at first launch so a "
                          "checkpoint can resume on any mesh whose device "
                          "count divides it")
+    ap.add_argument("--screening", action="store_true",
+                    help="safe λ-interval active-set screening: retire "
+                         "chunks that provably bin below the bucket "
+                         "ladder and skip them in iteration passes "
+                         "(bitwise-identical results; streaming SCD "
+                         "bucketed path only, DESIGN.md §11)")
+    ap.add_argument("--screening-floor", type=float, default=0.5,
+                    help="certify multipliers down to lam * this factor; "
+                         "an escape below the floor reactivates every "
+                         "chunk for one full pass")
     args = ap.parse_args()
 
     wl = WORKLOADS[args.workload]
@@ -201,7 +223,13 @@ def main():
                        use_kernels=args.use_kernels,
                        stream_finalize=args.stream_finalize,
                        checkpoint_every=args.checkpoint_every,
-                       chunk_size=None if args.streaming else args.chunk_size)
+                       chunk_size=None if args.streaming else args.chunk_size,
+                       screening=args.screening,
+                       screening_floor=args.screening_floor)
+    if args.screening and not (args.streaming or args.host_feed):
+        raise SystemExit("--screening requires --streaming or --host-feed "
+                         "(only the chunk-streamed drivers carry an active "
+                         "chunk set)")
     if ((args.checkpoint_every or args.checkpoint_dir or args.resume
          or args.slots) and not args.host_feed):
         raise SystemExit("--checkpoint-every/--checkpoint-dir/--resume/"

@@ -16,5 +16,6 @@ from .engine import (  # noqa: F401
     Generation,
     RefreshEngine,
     WorkloadSpec,
+    synthetic_chunk_diff,
     synthetic_source,
 )

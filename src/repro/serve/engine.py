@@ -68,7 +68,7 @@ from ..core.prefetch import (
 from ..core.types import SolverConfig
 
 __all__ = ["WorkloadSpec", "Generation", "RefreshEngine",
-           "synthetic_source"]
+           "synthetic_source", "synthetic_chunk_diff"]
 
 _POINTER = "LIVE.json"
 _FAILED = "FAILED.json"
@@ -98,6 +98,10 @@ class WorkloadSpec:
     q: int = 1
     tightness: float = 0.5
     budget_scale: float = 1.0
+    # Ratio-banded workload knob (data.synth.banded_host_chunk_source):
+    # 0 keeps the uniform §6 generator; > 0 draws cold cohorts' profits
+    # from [0, band) — the structure active-set screening retires.
+    band: float = 0.0
 
     def replace(self, **kw) -> "WorkloadSpec":
         """A copy with the given fields replaced (the refresh delta)."""
@@ -121,12 +125,44 @@ def synthetic_source(spec: WorkloadSpec) -> HostChunkSource:
     as a single f32 multiply so the same spec always produces the same
     budget bytes (the solver fingerprint hashes them).
     """
-    from ..data.synth import sparse_host_chunk_source
+    from ..data.synth import banded_host_chunk_source, sparse_host_chunk_source
 
-    src = sparse_host_chunk_source(spec.seed, spec.n, spec.k, spec.chunk,
-                                   q=spec.q, tightness=spec.tightness)
+    if spec.band > 0:
+        src = banded_host_chunk_source(spec.seed, spec.n, spec.k, spec.chunk,
+                                       q=spec.q, tightness=spec.tightness,
+                                       band=spec.band)
+    else:
+        src = sparse_host_chunk_source(spec.seed, spec.n, spec.k, spec.chunk,
+                                       q=spec.q, tightness=spec.tightness)
     budgets = (src.budgets * np.float32(spec.budget_scale)).astype(np.float32)
     return src._replace(budgets=budgets)
+
+
+def synthetic_chunk_diff(old: WorkloadSpec, new: WorkloadSpec):
+    """Which chunks' *bytes* differ between two synthetic specs.
+
+    The delta-refresh contract (DESIGN.md §11): returns a (c_new,) bool
+    mask — True where chunk i of the new workload is NOT byte-identical
+    to chunk i of the old one — or None when nothing can be inherited
+    (every chunk changed). For the ``data.synth`` generators a chunk is
+    a pure function of ``(seed, i, chunk, k, band)`` plus the row-live
+    mask from ``n``:
+
+    * ``seed``/``k``/``chunk``/``band`` differ -> None (new instance);
+    * ``n`` differs -> chunk i unchanged iff fully live under *both*
+      (``(i+1)*chunk <= min(n_old, n_new)``) — the ragged frontier and
+      everything past it is conservatively marked changed;
+    * ``q``/``tightness``/``budget_scale`` touch only the budgets, never
+      the chunk bytes -> zero changed chunks.
+    """
+    if (old.seed, old.k, old.chunk, old.band) != \
+            (new.seed, new.k, new.chunk, new.band):
+        return None
+    c_new = -(-new.n // new.chunk)
+    if old.n == new.n:
+        return np.zeros((c_new,), bool)
+    idx = np.arange(c_new)
+    return ~((idx + 1) * new.chunk <= min(old.n, new.n))
 
 
 class Generation(NamedTuple):
@@ -174,13 +210,22 @@ class RefreshEngine:
                  make_source: Callable[[WorkloadSpec],
                                        HostChunkSource] = synthetic_source,
                  cfg: SolverConfig = SolverConfig(), mesh=None,
-                 slots: Optional[int] = None, keep: Optional[int] = None):
+                 slots: Optional[int] = None, keep: Optional[int] = None,
+                 chunk_diff: Optional[Callable] = None):
         self.root = pathlib.Path(root)
         self.base_spec = base_spec
         self.make_source = make_source
         self.cfg = cfg
         self.mesh = mesh
         self.slots = slots
+        # Delta-refresh hook: (parent_spec, new_spec) -> changed-chunk
+        # mask (None = everything changed). Only meaningful with
+        # cfg.screening; defaults to the synthetic generators' diff when
+        # the engine also uses the synthetic source factory — a custom
+        # make_source must bring its own diff (or refresh solves cold).
+        if chunk_diff is None and make_source is synthetic_source:
+            chunk_diff = synthetic_chunk_diff
+        self.chunk_diff = chunk_diff
         # Generation retention (the serving mirror of cfg.checkpoint_keep):
         # every successful refresh sweeps all but the newest `keep`
         # generations — never the live or pending one. None disables the
@@ -300,6 +345,17 @@ class RefreshEngine:
         parent = self.live()
         return self._run(gen_id, spec, bool(meta["warm"]), parent)
 
+    def _parent_screen(self, parent: Generation) -> Optional[dict]:
+        """The parent generation's screening artifacts, or None when the
+        parent was solved unscreened (or predates screening)."""
+        state = ckpt.restore_auto(pathlib.Path(parent.path) / "record",
+                                  _RECORD_STEP)
+        if "screen_active" not in state:
+            return None
+        return {"active": np.asarray(state["screen_active"]).astype(bool),
+                "bmax": np.asarray(state["screen_bmax"], np.float32),
+                "lam_lo": np.asarray(state["screen_lam_lo"], np.float32)}
+
     def _run(self, gen_id: int, spec: WorkloadSpec, warm: bool,
              parent: Optional[Generation]) -> Generation:
         gdir = self._gen_dir(gen_id)
@@ -330,11 +386,26 @@ class RefreshEngine:
         })
 
         if not record_done:
+            # Delta refresh: seed the new solve's active set from the
+            # parent generation's published screening certificates —
+            # unchanged chunks start retired (never re-streamed unless
+            # the trajectory demands a fallback pass), changed chunks
+            # start active with unknown bounds. Recomputed identically
+            # on every re-entry (the parent record is immutable), so a
+            # resumed refresh still publishes the bitwise record.
+            screen_init = None
+            if (self.cfg.screening and parent is not None
+                    and self.chunk_diff is not None):
+                seed_state = self._parent_screen(parent)
+                changed = self.chunk_diff(parent.spec, spec)
+                if seed_state is not None and changed is not None:
+                    seed_state["changed"] = np.asarray(changed, bool)
+                    screen_init = seed_state
             try:
                 res = solve_streaming_host(
                     source, self.cfg, q=spec.q, lam0=lam0, mesh=self.mesh,
                     slots=self.slots, checkpoint_dir=str(ckdir),
-                    resume_from=str(ckdir))
+                    resume_from=str(ckdir), screen_init=screen_init)
             except ChunkFetchError as e:
                 # Failure containment: the solve exhausted its retry
                 # budget. LIVE.json is untouched (readers keep serving
@@ -365,6 +436,17 @@ class RefreshEngine:
             if res.fin_hist is not None:
                 record["fin_ch"] = np.asarray(res.fin_hist[0])
                 record["fin_gh"] = np.asarray(res.fin_hist[1])
+            if res.screen is not None:
+                # The screening artifacts the NEXT generation's delta
+                # refresh inherits (bool stored as uint8 for the
+                # checkpoint codec), plus the streamed-chunk counts for
+                # observability/benchmarks.
+                record["screen_active"] = np.asarray(
+                    res.screen["active"], np.uint8)
+                record["screen_bmax"] = np.asarray(res.screen["bmax"])
+                record["screen_lam_lo"] = np.asarray(res.screen["lam_lo"])
+                record["screen_streamed"] = np.asarray(
+                    res.screen["streamed_chunks"], np.int64)
             # Publication step 1: the record lands atomically...
             ckpt.save(gdir / "record", _RECORD_STEP, record)
         # A re-driven refresh that succeeded clears any failure stamp a

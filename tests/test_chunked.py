@@ -17,6 +17,7 @@ source-call counter (io_callback) — and the host-fed driver
 (core/prefetch.py) must be bit-identical to the traced one, double
 buffered or not.
 """
+import hashlib
 import math
 import os
 import pathlib
@@ -569,3 +570,45 @@ def test_fused_finalize_sharded_subprocess():
         capture_output=True, text=True, timeout=900, cwd=str(REPO))
     assert out.returncode == 0, out.stdout + "\n" + out.stderr
     assert "FINALIZE-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Pre-screening regression pin: the exact bytes, by digest.
+# ---------------------------------------------------------------------------
+
+# sha256 over the result fields below, recorded on the seeded fixture
+# immediately BEFORE active-set screening (core/screening.py) landed.
+# Both streaming drivers must keep producing these bytes with
+# cfg.screening=False — the feature must be provably inert when off —
+# and, on this uniform fixture (whose chunk ratio maxima never clear
+# the bucket ladder), with cfg.screening=True as well.
+_GOLDEN_FIELDS = ("lam", "iters", "r", "primal", "dual", "tau")
+_GOLDEN_STREAMING = \
+    "55910a2f97b1fbf45ea0336352e686b1e64554f51bb624f916fb1ec28868e2d0"
+
+
+def _result_digest(res):
+    h = hashlib.sha256()
+    for f in _GOLDEN_FIELDS:
+        h.update(np.asarray(getattr(res, f)).tobytes())
+    return h.hexdigest()
+
+
+def test_streaming_golden_digest_unchanged():
+    kp, q = sparse_instance(shard_key(4), 1021, 10, 2, tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=20)
+    src_np = (np.asarray(kp.p), np.asarray(kp.b), np.asarray(kp.budgets))
+
+    traced = solve_streaming(array_source(kp, 256), cfg, q=q)
+    assert _result_digest(traced) == _GOLDEN_STREAMING
+    host = solve_streaming_host(host_array_source(*src_np, 256), cfg, q=q)
+    assert _result_digest(host) == _GOLDEN_STREAMING
+
+    # Screening on: retires nothing here, must still not move a bit.
+    scfg = cfg.replace(screening=True)
+    t_scr = solve_streaming(array_source(kp, 256), scfg, q=q)
+    assert _result_digest(t_scr) == _GOLDEN_STREAMING
+    assert t_scr.screen is not None
+    h_scr = solve_streaming_host(host_array_source(*src_np, 256), scfg, q=q)
+    assert _result_digest(h_scr) == _GOLDEN_STREAMING
+    assert bool(h_scr.screen["active"].all())

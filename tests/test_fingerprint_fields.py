@@ -1,0 +1,82 @@
+"""Resume-fingerprint field-coverage guard.
+
+The checkpoint resume fingerprint (core/prefetch.py) hashes exactly the
+SolverConfig fields that change the multiplier trajectory or the
+finalize arithmetic; operational knobs (checkpoint cadence, fault
+policy, screening, ...) are deliberately exempt so they can change
+across a restart. The failure mode this file guards against is silent:
+someone adds a SolverConfig field and *forgets to decide* — the field is
+neither hashed nor exempted, and a checkpoint written before the change
+resumes against a semantically different solve (or a legitimate
+restart-time knob change spuriously refuses to resume). Here every
+field must be accounted for in exactly one of the two lists, and the
+hashed layout itself is pinned byte-for-byte.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.prefetch import (
+    _FINGERPRINT_CFG_FIELDS,
+    FINGERPRINT_EXEMPT_FIELDS,
+    source_fingerprint,
+)
+from repro.core.types import SolverConfig
+from repro.data.synth import sparse_host_chunk_source
+
+
+def test_every_field_fingerprinted_or_exempt():
+    fields = {f.name for f in dataclasses.fields(SolverConfig)}
+    hashed = set(_FINGERPRINT_CFG_FIELDS) | {"dtype"}
+    exempt = set(FINGERPRINT_EXEMPT_FIELDS)
+    overlap = hashed & exempt
+    assert not overlap, f"fields both hashed and exempt: {sorted(overlap)}"
+    missing = fields - hashed - exempt
+    assert not missing, (
+        f"SolverConfig fields neither fingerprinted nor exempted: "
+        f"{sorted(missing)} — add each to _FINGERPRINT_CFG_FIELDS if it "
+        "changes the solve, or to FINGERPRINT_EXEMPT_FIELDS if changing "
+        "it across a restart is legitimate")
+    phantom = (hashed | exempt) - fields
+    assert not phantom, (
+        f"fingerprint lists name non-existent fields: {sorted(phantom)}")
+
+
+def test_hashed_fields_exist_and_are_ordered_tuple():
+    # The hash layout depends on tuple order; a set would silently
+    # change the fingerprint across interpreter runs.
+    assert isinstance(_FINGERPRINT_CFG_FIELDS, tuple)
+    assert len(set(_FINGERPRINT_CFG_FIELDS)) == len(_FINGERPRINT_CFG_FIELDS)
+
+
+@pytest.fixture(scope="module")
+def _src():
+    return sparse_host_chunk_source(0, 1000, 4, 256)
+
+
+def test_exempt_fields_do_not_change_fingerprint(_src):
+    lam0 = np.ones((4,), np.float32)
+    base = source_fingerprint(_src, SolverConfig(), 1, lam0)
+    changed = SolverConfig(
+        max_iters=7, metrics_every=3, record_history=True,
+        checkpoint_every=5, checkpoint_keep=9, fetch_retries=2,
+        fetch_backoff=0.1, fetch_backoff_growth=3.0, fetch_backoff_cap=9.0,
+        fetch_jitter=0.5, fetch_timeout=1.0, verify_refetch=True,
+        chunk_size=128, screening=True, screening_floor=0.25)
+    assert np.array_equal(
+        base, source_fingerprint(_src, changed, 1, lam0)), (
+        "an exempt field perturbed the resume fingerprint — a restart "
+        "that legitimately changes it would refuse to resume")
+
+
+def test_hashed_fields_do_change_fingerprint(_src):
+    lam0 = np.ones((4,), np.float32)
+    base = source_fingerprint(_src, SolverConfig(), 1, lam0)
+    for field, value in [("bucket_half", 12), ("cd_damping", 0.25),
+                         ("tol", 1e-5), ("postprocess", False)]:
+        cfg = SolverConfig(**{field: value})
+        assert not np.array_equal(
+            base, source_fingerprint(_src, cfg, 1, lam0)), (
+            f"changing hashed field {field} left the fingerprint "
+            "unchanged")

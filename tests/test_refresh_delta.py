@@ -1,0 +1,314 @@
+"""Delta refresh: a screened generation re-streams only changed chunks.
+
+The contract under test (DESIGN.md §11, serve/engine.py): a refresh
+whose ``chunk_diff`` proves which chunks' bytes changed seeds the new
+solve's active set from the parent generation's published screening
+certificates — unchanged retired chunks start retired, changed chunks
+start active with unknown bounds — and publishes a record **bitwise
+identical** to the full refresh that re-streams everything (same
+record fields, same fingerprint, same LIVE pointer). The delta is an
+I/O optimisation with a soundness proof, not a different solve.
+
+Also pinned here:
+
+* re-streamed chunk accounting — the first delta epoch fetches exactly
+  the parent's surviving active set (budget-only delta) or that set
+  plus the changed chunks (growth delta), counted two independent ways
+  (the published ``screen_streamed`` record and a counting
+  ``make_source`` wrapper);
+* ``synthetic_chunk_diff``'s own contract (None / zeros / frontier);
+* the acceptance bar, for real: an 8-virtual-device sharded delta
+  refresh SIGKILLed mid-solve and re-driven publishes bitwise the
+  uninterrupted record (screening state is rebuilt, not checkpointed —
+  the seeding is recomputed identically from the immutable parent).
+"""
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import ckpt
+from repro.core import SolverConfig
+from repro.serve import (
+    RefreshEngine,
+    WorkloadSpec,
+    synthetic_chunk_diff,
+    synthetic_source,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# Ratio-banded workload (retirement actually happens) with the narrowed
+# ladder; checkpointing on so the SIGKILL path has resume states.
+SPEC = WorkloadSpec(seed=7, n=4000, k=6, chunk=250, q=2, tightness=0.08,
+                    band=0.05)
+CFG = SolverConfig(reduce="bucketed", max_iters=30, bucket_half=12,
+                   screening=True, checkpoint_every=4)
+
+RESULT_FIELDS = ["lam", "tau", "iters", "r", "primal", "dual"]
+
+
+def _assert_gen_equal(a, b):
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+    np.testing.assert_array_equal(a.fingerprint, b.fingerprint)
+    assert (a.fin_hist is None) == (b.fin_hist is None)
+    if a.fin_hist is not None:
+        for x, y in zip(a.fin_hist, b.fin_hist):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _record(gen):
+    return ckpt.restore_auto(pathlib.Path(gen.path) / "record", 0)
+
+
+def _streamed(gen):
+    return np.asarray(_record(gen)["screen_streamed"])
+
+
+def _counting_factory():
+    """synthetic_source with a per-refresh chunk-fetch counter."""
+    calls = {"n": 0}
+
+    def make(spec):
+        src = synthetic_source(spec)
+        inner = src.fn
+
+        def fn(i):
+            calls["n"] += 1
+            return inner(i)
+
+        return src._replace(fn=fn)
+
+    return make, calls
+
+
+# ---------------------------------------------------------------------------
+# Delta vs full: bitwise record, fewer bytes moved.
+# ---------------------------------------------------------------------------
+
+def test_delta_refresh_bitwise_vs_full(tmp_path):
+    """Budget-only delta: the delta engine inherits the parent's retired
+    set and still publishes the full-restream engine's exact bits."""
+    delta_eng = RefreshEngine(tmp_path / "delta", SPEC, cfg=CFG)
+    full_eng = RefreshEngine(tmp_path / "full", SPEC, cfg=CFG,
+                             chunk_diff=lambda old, new: None)
+    assert delta_eng.chunk_diff is synthetic_chunk_diff   # default wiring
+
+    p_delta = delta_eng.refresh()
+    p_full = full_eng.refresh()
+    _assert_gen_equal(p_delta, p_full)                    # same gen 0
+
+    g_delta = delta_eng.refresh(budget_scale=1.02)
+    g_full = full_eng.refresh(budget_scale=1.02)
+    _assert_gen_equal(g_delta, g_full)
+    assert delta_eng.live().gen == 1 and full_eng.live().gen == 1
+    assert g_delta.spec.budget_scale == pytest.approx(1.02)
+
+    # Accounting: the parent retired most chunks; the delta's first
+    # epoch streams exactly the survivors, the full restream all of c.
+    c = -(-SPEC.n // SPEC.chunk)
+    parent_active = int(np.asarray(_record(p_delta)["screen_active"]).sum())
+    assert 0 < parent_active < c
+    sd, sf = _streamed(g_delta), _streamed(g_full)
+    assert sd[0] == parent_active, (sd, parent_active)
+    assert sf[0] == c, sf
+    assert sd.sum() < sf.sum(), (sd, sf)
+
+
+def test_delta_restream_counted_at_the_source(tmp_path):
+    """Independent count: a wrapping make_source sees the delta refresh
+    save exactly the fetches the screen record claims it skipped.
+
+    Both engines pay identical fixed costs (fingerprint probes, the
+    fused-finalize full pass); the difference in raw source fetches is
+    therefore exactly the difference in iteration-epoch streaming."""
+    def run(root, diff):
+        make, calls = _counting_factory()
+        eng = RefreshEngine(root, SPEC, make_source=make, cfg=CFG,
+                            chunk_diff=diff)
+        p = eng.refresh()
+        calls["n"] = 0
+        g = eng.refresh(budget_scale=1.02)
+        return p, g, calls["n"]
+
+    p, g_d, fetches_d = run(tmp_path / "delta", synthetic_chunk_diff)
+    _, g_f, fetches_f = run(tmp_path / "full", lambda old, new: None)
+    _assert_gen_equal(g_d, g_f)
+    sd, sf = _streamed(g_d), _streamed(g_f)
+    assert fetches_d < fetches_f
+    assert fetches_f - fetches_d == int(sf.sum() - sd.sum()), (
+        fetches_d, fetches_f, sd, sf)
+    parent_active = int(np.asarray(_record(p)["screen_active"]).sum())
+    assert sd[0] == parent_active
+
+
+def test_growth_delta_streams_survivors_plus_frontier(tmp_path):
+    """n growth: first delta epoch = parent survivors + the chunks the
+    diff marks changed (the ragged frontier and the genuinely new)."""
+    eng = RefreshEngine(tmp_path / "delta", SPEC, cfg=CFG)
+    p = eng.refresh()
+    n2 = SPEC.n + 500                                     # 16 -> 18 chunks
+    changed = synthetic_chunk_diff(SPEC, SPEC.replace(n=n2))
+    g = eng.refresh(n=n2)
+
+    oracle = RefreshEngine(tmp_path / "full", SPEC, cfg=CFG,
+                           chunk_diff=lambda old, new: None)
+    oracle.refresh()
+    _assert_gen_equal(g, oracle.refresh(n=n2))
+
+    parent_active = np.asarray(_record(p)["screen_active"]).astype(bool)
+    c_old = parent_active.shape[0]
+    inherited = int(parent_active[~changed[:c_old]].sum())
+    expect = inherited + int(changed.sum())
+    assert _streamed(g)[0] == expect, (_streamed(g), inherited, changed)
+
+
+def test_synthetic_chunk_diff_contract():
+    base = SPEC
+    # Budget-shaped deltas never touch chunk bytes.
+    for delta in [dict(budget_scale=0.9), dict(tightness=0.2), dict(q=3)]:
+        ch = synthetic_chunk_diff(base, base.replace(**delta))
+        assert ch is not None and not ch.any(), delta
+    # Identity-shaped deltas invalidate everything.
+    for delta in [dict(seed=8), dict(k=7), dict(chunk=200), dict(band=0.1)]:
+        assert synthetic_chunk_diff(base, base.replace(**delta)) is None, \
+            delta
+    # Growth: unchanged iff fully live under BOTH n's.
+    ch = synthetic_chunk_diff(base, base.replace(n=base.n + 500))
+    c_old = -(-base.n // base.chunk)
+    assert ch.shape == (c_old + 2,)
+    assert not ch[:c_old].any() and ch[c_old:].all()
+    # Shrink: the new frontier chunk is conservatively changed.
+    ch = synthetic_chunk_diff(base, base.replace(n=base.n - 100))
+    assert ch.shape == (c_old,)
+    assert not ch[:-1].any() and ch[-1]
+
+
+def test_unscreened_parent_solves_delta_cold(tmp_path):
+    """A parent published without screening has no certificates to
+    inherit; the screened delta refresh must degrade to a full first
+    epoch — and still match the all-restream oracle bitwise."""
+    cold_cfg = CFG.replace(screening=False)
+    eng = RefreshEngine(tmp_path / "a", SPEC, cfg=cold_cfg)
+    eng.refresh()
+    eng = RefreshEngine(tmp_path / "a", SPEC, cfg=CFG)    # flip screening on
+    g = eng.refresh(budget_scale=1.02)
+    c = -(-SPEC.n // SPEC.chunk)
+    assert _streamed(g)[0] == c                           # nothing inherited
+
+    oracle = RefreshEngine(tmp_path / "b", SPEC, cfg=cold_cfg)
+    oracle.refresh()
+    o = RefreshEngine(tmp_path / "b", SPEC, cfg=CFG,
+                      chunk_diff=lambda old, new: None).refresh(
+        budget_scale=1.02)
+    _assert_gen_equal(g, o)
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL mid-delta-refresh: resume publishes the same bits.
+# ---------------------------------------------------------------------------
+
+_SIGKILL_SCRIPT = textwrap.dedent("""
+    import os, pathlib, signal, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro.checkpoint import ckpt
+    from repro.core import SolverConfig
+    from repro.serve import (RefreshEngine, WorkloadSpec,
+                             synthetic_chunk_diff, synthetic_source)
+
+    mode, kill_after, root, out = (sys.argv[1], int(sys.argv[2]),
+                                   sys.argv[3], sys.argv[4])
+    spec = WorkloadSpec(seed=7, n=4000, k=6, chunk=250, q=2,
+                        tightness=0.08, band=0.05)
+    cfg = SolverConfig(reduce="bucketed", max_iters=30, bucket_half=12,
+                       screening=True, checkpoint_every=1)
+    mesh = jax.make_mesh((8,), ("users",))
+
+    make = synthetic_source
+    if mode == "kill":
+        calls = {"n": 0}
+        def make(s):
+            src = synthetic_source(s)
+            inner = src.fn
+            def fn(i):
+                calls["n"] += 1
+                if calls["n"] > kill_after:
+                    os.kill(os.getpid(), signal.SIGKILL)
+                return inner(i)
+            return src._replace(fn=fn)
+
+    # chunk_diff must be explicit: the killing wrapper is not
+    # synthetic_source, so the engine's default delta wiring would not
+    # engage and the refresh would silently solve full, not delta.
+    eng = RefreshEngine(root, spec, make_source=make, cfg=cfg,
+                        mesh=mesh, slots=8,
+                        chunk_diff=synthetic_chunk_diff)
+    if eng.live_gen_id() is None:
+        cold = RefreshEngine(root, spec, make_source=synthetic_source,
+                             cfg=cfg, mesh=mesh, slots=8)
+        cold.refresh()                        # gen 0, uninterrupted
+        eng = RefreshEngine(root, spec, make_source=make, cfg=cfg,
+                            mesh=mesh, slots=8,
+                            chunk_diff=synthetic_chunk_diff)
+    gen = eng.refresh(budget_scale=1.02)      # gen 1 delta (killed in "kill")
+    rec = ckpt.restore_auto(pathlib.Path(gen.path) / "record", 0)
+    np.savez(out, lam=gen.lam, tau=gen.tau, iters=gen.iters, r=gen.r,
+             primal=gen.primal, dual=gen.dual, ch=gen.fin_hist[0],
+             gh=gen.fin_hist[1], warm=gen.warm,
+             active=np.asarray(rec["screen_active"]))
+    print("GEN-OK", gen.gen, int(gen.iters))
+""")
+
+
+def _run_script(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run([sys.executable, "-c", _SIGKILL_SCRIPT] + args,
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout, cwd=str(REPO))
+
+
+@pytest.mark.slow
+def test_sigkill_mid_delta_refresh_resume_bitwise(tmp_path):
+    """An 8-virtual-device sharded DELTA refresh SIGKILLed mid-solve and
+    re-driven publishes bitwise the uninterrupted delta record — the
+    screening seed is recomputed from the immutable parent on re-entry,
+    never checkpointed — and the pointer never exposes the half-done
+    generation."""
+    ref = tmp_path / "ref.npz"
+    out = _run_script(["ref", "0", str(tmp_path / "ref_root"), str(ref)])
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "GEN-OK 1" in out.stdout
+
+    root = tmp_path / "killed_root"
+    # Gen 1's delta epochs fetch only the parent's survivors (a handful
+    # of chunks per iteration); 6 fetches lands mid-solve, after the
+    # first checkpoint but well before convergence.
+    killed = _run_script(["kill", "6", str(root), "x"])
+    assert killed.returncode == -signal.SIGKILL, (
+        killed.returncode, killed.stdout, killed.stderr)
+    ptr = ckpt.read_json(pathlib.Path(root), "LIVE.json")
+    assert ptr is not None and int(ptr["gen"]) == 0
+    assert ckpt.latest_step(pathlib.Path(root) / "gen_000001" / "ckpt") \
+        is not None
+
+    got_path = tmp_path / "resumed.npz"
+    res = _run_script(["resume", "0", str(root), str(got_path)])
+    assert res.returncode == 0, res.stdout + res.stderr
+    want, got = np.load(ref), np.load(got_path)
+    for key in ["lam", "tau", "iters", "r", "primal", "dual", "ch", "gh",
+                "warm", "active"]:
+        np.testing.assert_array_equal(got[key], want[key], err_msg=key)

@@ -1,0 +1,257 @@
+"""Property suite for safe λ-interval active-set screening (DESIGN.md §11).
+
+The claim under test is absolute: a screened solve — which *skips*
+retired chunks in every iteration pass — returns **bitwise** the
+unscreened solve's every field, on both streaming drivers. Three
+property families, each with a deterministic twin that always runs and a
+hypothesis sweep (gated by ``REQUIRE_HYPOTHESIS`` in CI like the other
+property suites):
+
+* **oracle parity** — screened vs unscreened host-fed and traced solves
+  agree field-for-field (lam/iters/r/primal/dual/tau and the finalize
+  histograms), across instance seeds, budget tightness, cold-band
+  widths, damping and floor factors; and the per-row decisions derived
+  from (lam, tau) — the thing production serves — match row-for-row.
+* **safe-elimination soundness** — every retired chunk's stored
+  certificate dominates an independently recomputed f64 bound of its
+  actual bytes AND clears the floor ladder's lowest edge: retirement
+  never rests on an understated bound.
+* **monotone shrinkage** — with no floor escapes, the traced driver's
+  per-iteration active-chunk telemetry never grows.
+
+The workloads are ratio-banded (``data.synth.banded_host_chunk_source``)
+with a narrowed bucket ladder: uniform-[0,1]/[0,1] data has heavy-tailed
+chunk ratio maxima and retires nothing (that degenerate case is pinned
+too — screening must still be bitwise when it never fires).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chunked import (
+    ChunkSource,
+    decisions_chunk,
+    solve_streaming,
+)
+from repro.core.prefetch import solve_streaming_host
+from repro.core.screening import HostScreen, chunk_bound, lowest_edges
+from repro.core.types import SolverConfig
+from repro.data.synth import banded_host_chunk_source, sparse_host_chunk_source
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+jax.config.update("jax_platform_name", "cpu")
+
+RESULT_FIELDS = ["lam", "iters", "r", "primal", "dual", "tau"]
+
+# One fixed shape family across every example so XLA programs compile
+# once per driver; the hypothesis sweep varies data, not shapes.
+N, K, CHUNK, Q, ITERS, HALF = 3000, 5, 250, 2, 18, 12
+
+
+def _cfg(floor=0.5, damping=0.5, screening=False):
+    return SolverConfig(reduce="bucketed", max_iters=ITERS,
+                        bucket_half=HALF, cd_damping=damping,
+                        screening=screening, screening_floor=floor)
+
+
+def _banded(seed, tightness, band):
+    return banded_host_chunk_source(seed, N, K, CHUNK, q=Q,
+                                    tightness=tightness, band=band)
+
+
+def _traced_source(host_src):
+    """The traced twin of a host source: same bytes, jnp-delivered."""
+    c = -(-host_src.n // host_src.chunk)
+    chunks = [host_src.fn(i) for i in range(c)]
+    ps = jnp.asarray(np.stack([p for p, _ in chunks]))
+    bs = jnp.asarray(np.stack([b for _, b in chunks]))
+
+    def fn(i):
+        j = jnp.minimum(i, c - 1)
+        live = i < c
+        p = jax.lax.dynamic_index_in_dim(ps, j, keepdims=False)
+        b = jax.lax.dynamic_index_in_dim(bs, j, keepdims=False)
+        return (jnp.where(live, p, 0.0), jnp.where(live, b, 0.0))
+
+    return ChunkSource(n=host_src.n, k=host_src.k, chunk=host_src.chunk,
+                       budgets=jnp.asarray(host_src.budgets), fn=fn)
+
+
+def _assert_bitwise(a, b, what):
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{what}: field {f} diverged")
+    # Same-driver pairs carry matching fin_hist structure; the
+    # cross-driver pair legitimately differs (the traced driver only
+    # materialises finalize histograms on the postprocess path).
+    if a.fin_hist is not None and b.fin_hist is not None:
+        for x, y in zip(a.fin_hist, b.fin_hist):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"{what}: fin_hist")
+
+
+# ---------------------------------------------------------------------------
+# Check bodies.
+# ---------------------------------------------------------------------------
+
+def check_host_parity(seed, tightness, band, floor=0.5, damping=0.5):
+    """Screened host solve is bitwise the unscreened host solve; the
+    derived per-row decisions match; soundness holds on the retired set."""
+    src = _banded(seed, tightness, band)
+    base = solve_streaming_host(src, _cfg(floor, damping), q=Q)
+    scr = solve_streaming_host(src, _cfg(floor, damping, screening=True),
+                               q=Q)
+    _assert_bitwise(base, scr, f"host seed={seed}")
+    assert scr.screen is not None and base.screen is None
+
+    # Decisions — the served artifact — row-for-row via the shared
+    # decision kernel (lam/tau being bitwise makes this a pinned
+    # consequence; assert it directly anyway on a couple of chunks).
+    tsrc = _traced_source(src)
+    for i in (0, 1):
+        xb, _ = decisions_chunk(tsrc, base.lam, Q, i, tau=base.tau)
+        xs, _ = decisions_chunk(tsrc, scr.lam, Q, i, tau=scr.tau)
+        np.testing.assert_array_equal(np.asarray(xb), np.asarray(xs))
+    return scr
+
+
+def check_soundness(scr_res, src, cfg):
+    """Retired certificates (a) clear the floor ladder's lowest edge and
+    (b) dominate an independent f64 recomputation of the chunk bytes."""
+    stats = scr_res.screen
+    active, bmax = stats["active"], stats["bmax"]
+    e0 = lowest_edges(stats["lam_lo"], cfg)
+    retired = np.flatnonzero(~active)
+    assert retired.size, "workload retired nothing — check is vacuous"
+    c = -(-src.n // src.chunk)
+    for g in retired:
+        assert np.all(bmax[g] <= e0), (g, bmax[g], e0)
+        if g >= c:
+            continue                       # padded slot: zero bytes
+        p, b = src.fn(int(g))
+        with np.errstate(divide="ignore", invalid="ignore"):
+            true64 = np.where(b > 0, p.astype(np.float64)
+                              / b.astype(np.float64), -np.inf).max(axis=0)
+        # The stored f32 certificate must not understate the true ratio
+        # by more than one f32 rounding step of the division (round to
+        # nearest: |fl(x) - x| <= 0.5 ulp, so one f32 step up covers x).
+        up32 = np.nextafter(bmax[g], np.float32(np.inf))
+        assert np.all(up32.astype(np.float64) >= true64), (
+            g, bmax[g], true64)
+        kernel = np.asarray(chunk_bound(jnp.asarray(p), jnp.asarray(b)))
+        np.testing.assert_array_equal(kernel, bmax[g])
+
+
+def check_traced_parity_and_shrinkage(seed, tightness, band):
+    """Traced screened == traced unscreened bitwise; active counts are
+    non-increasing across iterations when no floor escape happened."""
+    src = _traced_source(_banded(seed, tightness, band))
+    base = solve_streaming(src, _cfg(), q=Q)
+    scr = solve_streaming(src, _cfg(screening=True), q=Q)
+    _assert_bitwise(base, scr, f"traced seed={seed}")
+    counts = np.asarray(scr.screen["active_chunks"])
+    counts = counts[counts >= 0]
+    assert counts.size >= int(scr.iters)
+    if int(np.asarray(scr.screen["resets"])) == 0:
+        assert np.all(np.diff(counts) <= 0), counts
+    return scr
+
+
+# ---------------------------------------------------------------------------
+# Deterministic twins (always run).
+# ---------------------------------------------------------------------------
+
+def test_host_parity_banded():
+    cfg = _cfg(screening=True)
+    src = _banded(11, 0.08, 0.05)
+    scr = check_host_parity(11, 0.08, 0.05)
+    # The workload is built to retire most chunks — the claim is not
+    # vacuously "screening never fired".
+    assert int(scr.screen["active"].sum()) < scr.screen["active"].size
+    check_soundness(scr, src, cfg)
+
+
+def test_host_parity_uniform_never_retires():
+    """Uniform data: certificates never clear the ladder; screening must
+    stream everything and stay bitwise (the degenerate no-op case)."""
+    src = sparse_host_chunk_source(3, N, K, CHUNK, q=Q, tightness=0.4)
+    base = solve_streaming_host(src, _cfg(), q=Q)
+    scr = solve_streaming_host(src, _cfg(screening=True), q=Q)
+    _assert_bitwise(base, scr, "uniform host")
+    assert bool(scr.screen["active"].all())
+    streamed = np.asarray(scr.screen["streamed_chunks"])
+    c = -(-N // CHUNK)
+    assert np.all(streamed == c), streamed
+
+
+def test_traced_parity_and_monotone_shrinkage():
+    scr = check_traced_parity_and_shrinkage(11, 0.08, 0.05)
+    counts = np.asarray(scr.screen["active_chunks"])
+    counts = counts[counts >= 0]
+    assert counts[-1] < counts[0]          # really shrank
+
+
+def test_host_traced_cross_driver_bitwise():
+    """Screened host == screened traced == unscreened either: one
+    equality chain across both drivers on the same bytes."""
+    hsrc = _banded(5, 0.1, 0.05)
+    tsrc = _traced_source(hsrc)
+    rh = solve_streaming_host(hsrc, _cfg(screening=True), q=Q)
+    rt = solve_streaming(tsrc, _cfg(screening=True), q=Q)
+    _assert_bitwise(rh, rt, "host vs traced screened")
+
+
+def test_seeded_screen_floor_never_lowers():
+    """A delta-refresh seed must not drop the floor below the seed's —
+    the inherited certificates were only certified down to it."""
+    cfg = _cfg(screening=True)
+    k = 3
+    seed = {"active": np.array([False, True]),
+            "bmax": np.zeros((2, k), np.float32),
+            "lam_lo": np.full((k,), 2.0, np.float32)}
+    hs = HostScreen(2, k, cfg, np.ones((k,), np.float32), seed=seed)
+    assert np.all(hs.lam_lo >= 2.0)
+    # ... and a warm start below that floor escapes (reactivates all)
+    # rather than trusting the inherited retirement.
+    ok = hs.begin_iter(np.ones((k,), np.float32))
+    assert not ok and bool(hs.active.all()) and hs.resets == 1
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestScreeningSweep:
+    @given(seed=st.integers(0, 2**31 - 1),
+           tightness=st.floats(0.04, 0.15),
+           band=st.floats(0.02, 0.2),
+           floor=st.floats(0.25, 0.9),
+           damping=st.sampled_from([1.0, 0.5, 0.25]))
+    @settings(max_examples=8, deadline=None)
+    def test_host_parity_sweep(self, seed, tightness, band, floor, damping):
+        check_host_parity(seed, tightness, band, floor, damping)
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           tightness=st.floats(0.04, 0.15),
+           band=st.floats(0.02, 0.12))
+    @settings(max_examples=5, deadline=None)
+    def test_traced_parity_sweep(self, seed, tightness, band):
+        check_traced_parity_and_shrinkage(seed, tightness, band)
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           scale=st.floats(0.8, 1.25))
+    @settings(max_examples=5, deadline=None)
+    def test_budget_scale_parity(self, seed, scale):
+        """Budget perturbations move the trajectory (and the crossing
+        buckets) — parity must survive wherever the guard lands."""
+        src = _banded(seed, 0.08, 0.05)
+        src = src._replace(budgets=(src.budgets
+                                    * np.float32(scale)).astype(np.float32))
+        base = solve_streaming_host(src, _cfg(), q=Q)
+        scr = solve_streaming_host(src, _cfg(screening=True), q=Q)
+        _assert_bitwise(base, scr, f"budget scale {scale}")

@@ -550,3 +550,84 @@ def test_host_sharded_matches_traced_sharded_subprocess(tmp_path):
                          timeout=900, cwd=str(REPO))
     assert out.returncode == 0, out.stdout + "\n" + out.stderr
     assert "PARITY-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Pre-screening regression pin + the screening/resume interplay.
+# ---------------------------------------------------------------------------
+
+# sha256 over RESULT_FIELDS of the 8-virtual-device sharded solve on the
+# seeded fixture below, recorded immediately BEFORE active-set screening
+# (core/screening.py) landed. cfg.screening=False must keep producing
+# these exact bytes; screening=True must too on this uniform workload
+# (its chunk ratio maxima never clear the bucket ladder, so the active
+# set never shrinks and every epoch streams everything).
+_GOLDEN_SHARDED = \
+    "072a1ca1a405c827933ca8b387870d5415114bca09a220aefa027d47aa060f52"
+
+_GOLDEN_SHARDED_SCRIPT = textwrap.dedent("""
+    import hashlib, os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro.core import SolverConfig
+    from repro.core.prefetch import solve_streaming_host
+    from repro.data.synth import sparse_host_chunk_source
+
+    def digest(res):
+        h = hashlib.sha256()
+        for f in ("lam", "iters", "r", "primal", "dual", "tau"):
+            h.update(np.asarray(getattr(res, f)).tobytes())
+        return h.hexdigest()
+
+    src = sparse_host_chunk_source(4, 2048, 8, 128, q=2, tightness=0.5)
+    cfg = SolverConfig(reduce="bucketed", max_iters=40)
+    mesh = jax.make_mesh((8,), ("users",))
+    res = solve_streaming_host(src, cfg, q=2, mesh=mesh, slots=8)
+    print("PLAIN", digest(res))
+    scr = solve_streaming_host(src, cfg.replace(screening=True), q=2,
+                               mesh=mesh, slots=8)
+    assert bool(scr.screen["active"].all())
+    print("SCREENED", digest(scr))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_golden_digest_unchanged():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", _GOLDEN_SHARDED_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=900, cwd=str(REPO))
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert f"PLAIN {_GOLDEN_SHARDED}" in out.stdout, out.stdout
+    assert f"SCREENED {_GOLDEN_SHARDED}" in out.stdout, out.stdout
+
+
+def test_resume_across_screening_toggle_bitwise(tmp_path):
+    """cfg.screening is resume-fingerprint-EXEMPT (it never steers the
+    trajectory): a checkpoint written unscreened resumes under
+    screening=True — and vice versa — bitwise. The end-to-end twin of
+    test_fingerprint_fields.py's field-coverage guard."""
+    make, q = _instance()
+    cfg = SolverConfig(reduce="bucketed", max_iters=20, checkpoint_every=2)
+    base = solve_streaming_host(make(), cfg, q=q, slots=4)
+
+    d1 = tmp_path / "off_to_on"
+    src, _ = _killing(make, 70)
+    with pytest.raises(_Kill):
+        solve_streaming_host(src, cfg, q=q, slots=4,
+                             checkpoint_dir=str(d1))
+    res = solve_streaming_host(make(), cfg.replace(screening=True), q=q,
+                               resume_from=str(d1))
+    _assert_bitwise(res, base)
+    assert res.screen is not None
+
+    d2 = tmp_path / "on_to_off"
+    src, _ = _killing(make, 70)
+    with pytest.raises(_Kill):
+        solve_streaming_host(src, cfg.replace(screening=True), q=q,
+                             slots=4, checkpoint_dir=str(d2))
+    res = solve_streaming_host(make(), cfg, q=q, resume_from=str(d2))
+    _assert_bitwise(res, base)
+    assert res.screen is None

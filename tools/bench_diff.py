@@ -2,7 +2,12 @@
 
 ``python tools/bench_diff.py COMMITTED CURRENT [--tol 0.25]``
 
-The report kind is auto-detected. For serve reports
+The report kind is auto-detected. For screening reports
+(``BENCH_screening.json``, tagged ``"bench": "screening"``), the
+screened solve must be bitwise-identical to the unscreened oracle,
+stream no more items than it, keep its deterministic streamed-chunk
+profile at equal iteration counts, and keep the items-reduction ratio
+within ``--tol`` of the committed report. For serve reports
 (``BENCH_serve.json``, tagged ``"bench": "serve"``), points are matched
 by ``n`` and the **cold/warm iteration ratio** — the paper's daily-call
 warm-start payoff — must not shrink by more than ``--tol`` against the
@@ -80,14 +85,63 @@ def diff_serve(committed: dict, current: dict, tol: float) -> list:
     return problems
 
 
+def diff_screening(committed: dict, current: dict, tol: float) -> list:
+    """Screening-report violations: oracle parity is absolute, the
+    streamed-item reduction is the gated payoff.
+
+    The screened solve must stay bitwise-identical to the unscreened
+    oracle and stream no more items than it; both streamed profiles are
+    deterministic, so at an equal iteration count any profile drift is a
+    violation in itself. The items-reduction ratio must not shrink by
+    more than ``tol`` against the committed report (wall time is
+    informational — streamed items are the I/O the feature exists to
+    save)."""
+    problems = []
+    base = _points_by_n(committed)
+    new = _points_by_n(current)
+    shared = sorted(set(base) & set(new))
+    if not shared:
+        return [f"no shared n between committed {sorted(base)} and "
+                f"current {sorted(new)}"]
+    for n in shared:
+        ref, cur = base[n], new[n]
+        if not cur["identical"]:
+            problems.append(
+                f"n={n}: screened result no longer bitwise-identical to "
+                "the unscreened oracle")
+            continue
+        s, u = cur["screened"], cur["unscreened"]
+        if s["items_streamed"] > u["items_streamed"]:
+            problems.append(
+                f"n={n}: screening streamed MORE items than the oracle "
+                f"({s['items_streamed']} > {u['items_streamed']})")
+            continue
+        if cur["iterations"] != ref["iterations"]:
+            print(f"note: n={n} iteration count "
+                  f"{ref['iterations']} -> {cur['iterations']}; profile "
+                  "comparison skipped, reduction ratio still gated")
+        elif s["chunks_per_iter"] != ref["screened"]["chunks_per_iter"]:
+            problems.append(
+                f"n={n}: screened streamed-chunk profile drifted at equal "
+                f"iteration count: {ref['screened']['chunks_per_iter']} -> "
+                f"{s['chunks_per_iter']} (retirement got lazier?)")
+        if cur["items_reduction"] < ref["items_reduction"] * (1.0 - tol):
+            problems.append(
+                f"n={n}: items-streamed reduction "
+                f"{ref['items_reduction']} -> {cur['items_reduction']} "
+                f"(screening payoff shrank > {tol:.0%})")
+    return problems
+
+
 def diff(committed: dict, current: dict, tol: float) -> list:
     """Return a list of human-readable violations (empty = gate passes)."""
-    if committed.get("bench") == "serve" or current.get("bench") == "serve":
-        if committed.get("bench") != current.get("bench"):
-            return [f"report kind mismatch: committed "
-                    f"{committed.get('bench')!r} vs current "
-                    f"{current.get('bench')!r}"]
-        return diff_serve(committed, current, tol)
+    for kind, fn in (("serve", diff_serve), ("screening", diff_screening)):
+        if committed.get("bench") == kind or current.get("bench") == kind:
+            if committed.get("bench") != current.get("bench"):
+                return [f"report kind mismatch: committed "
+                        f"{committed.get('bench')!r} vs current "
+                        f"{current.get('bench')!r}"]
+            return fn(committed, current, tol)
     problems = []
     base = _points_by_n(committed)
     new = _points_by_n(current)
