@@ -12,7 +12,7 @@ Layout (one directory per step):
   torn checkpoint.
 * Durability: leaf files and manifests are fsynced before the rename and
   the parent directory after it, so a published step (or pointer flip)
-  survives power loss, not just SIGKILL — see ``_fsync_dir``.
+  survives power loss, not just SIGKILL — see ``fsync_dir``.
 * Restart: ``latest_step`` + ``restore`` rebuild the exact pytree.
 * Elastic re-sharding: restore takes an optional ``sharding_tree``; arrays
   are re-placed with ``jax.device_put`` against the *current* mesh, which
@@ -53,7 +53,7 @@ def _leaves_with_paths(tree):
     return flat, treedef
 
 
-def _fsync_dir(path) -> None:
+def fsync_dir(path) -> None:
     """fsync a directory so its entries (renames, creations) are durable.
 
     ``os.replace`` gives *atomicity* (a reader sees old or new, never a
@@ -61,6 +61,11 @@ def _fsync_dir(path) -> None:
     be rolled back unless the parent directory's metadata was synced.
     Platforms whose directory handles reject fsync are skipped — the
     write stays atomic there, just not power-loss-durable.
+
+    Public because it is the shared durability primitive of every
+    rename-published artifact in the repo: checkpoint steps and pointer
+    documents here, heartbeat lease records in
+    :mod:`repro.core.heartbeat`.
     """
     try:
         fd = os.open(path, os.O_RDONLY)
@@ -110,11 +115,11 @@ def save(directory, step: int, tree) -> str:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
-    _fsync_dir(tmp)
+    fsync_dir(tmp)
     if final.exists():
         shutil.rmtree(final)
     os.replace(tmp, final)
-    _fsync_dir(d)
+    fsync_dir(d)
     return str(final)
 
 
@@ -256,7 +261,7 @@ def write_json(directory, name: str, payload: dict) -> str:
         os.fsync(f.fileno())
     final = d / name
     os.replace(tmp, final)
-    _fsync_dir(d)
+    fsync_dir(d)
     return str(final)
 
 

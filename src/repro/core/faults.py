@@ -49,8 +49,9 @@ from typing import Callable, Optional
 import numpy as np
 
 __all__ = ["FaultPolicy", "FaultPlan", "ChunkFetchError",
-           "ChunkFetchTimeout", "ChunkIntegrityError", "fetch_with_retries",
-           "resilient_source", "faulty_source", "policy_from_cfg"]
+           "ChunkFetchTimeout", "ChunkIntegrityError", "FetchCapacityError",
+           "fetch_with_retries", "resilient_source", "faulty_source",
+           "policy_from_cfg", "abandoned_workers", "ABANDONED_WORKER_CAP"]
 
 # Exceptions a retry may recover from. Anything else (a programming
 # error, an injected kill) propagates immediately: retrying it would
@@ -60,6 +61,20 @@ RETRYABLE = (IOError, OSError, TimeoutError)
 
 class ChunkFetchTimeout(IOError):
     """A fetch exceeded the policy's per-fetch timeout (retryable)."""
+
+
+class FetchCapacityError(IOError):
+    """Too many abandoned fetch workers are still running (retryable).
+
+    Each timed-out fetch abandons a daemon worker thread; a source that
+    hangs *persistently* would otherwise accumulate them without bound
+    (every retry of every chunk parks another thread on the same dead
+    backend). The cap makes that failure mode loud and finite: once
+    :data:`ABANDONED_WORKER_CAP` abandoned workers are still alive, new
+    timed fetches fail fast with this retryable error — the backoff
+    schedule gives stragglers time to drain, and true exhaustion
+    surfaces as the usual :class:`ChunkFetchError` naming this cause.
+    """
 
 
 class ChunkIntegrityError(IOError):
@@ -108,7 +123,10 @@ class FaultPolicy:
     a daemon worker thread; an overrun raises the retryable
     :class:`ChunkFetchTimeout`. The abandoned worker may still complete
     in the background — harmless under the fetch-is-pure contract, the
-    late payload is simply dropped.
+    late payload is simply dropped — but it is *tracked*: live
+    abandoned workers are capped at :data:`ABANDONED_WORKER_CAP`
+    (:class:`FetchCapacityError` past it) and counted in
+    :func:`abandoned_workers`.
     """
 
     max_retries: int = 4
@@ -153,15 +171,58 @@ class FaultPolicy:
                      for a in range(1, self.max_retries + 1))
 
 
+# Abandoned-worker accounting (process-wide). A timed-out fetch parks
+# its daemon worker here; dead threads are reaped before every timed
+# fetch and on every read, so "live" is the number still actually
+# holding a thread. ``ABANDONED_WORKER_CAP`` bounds them — tests may
+# monkeypatch it (it is read at call time, never cached).
+ABANDONED_WORKER_CAP = 64
+_abandoned_lock = threading.Lock()
+_abandoned: list = []      # threads abandoned by a timeout, maybe live
+_abandoned_total = 0       # monotone count of every abandonment
+
+
+def _reap_abandoned_locked() -> None:
+    _abandoned[:] = [t for t in _abandoned if t.is_alive()]
+
+
+def abandoned_workers() -> dict:
+    """Leaked-fetch-worker counters: ``{"live", "total", "cap"}``.
+
+    ``live`` is the number of abandoned daemon threads still running
+    right now (hung fetches that never returned); ``total`` counts every
+    abandonment since process start. Surfaced by
+    :meth:`repro.serve.decisions.DecisionService.health` so a backend
+    that hangs rather than fails shows up in serving health before the
+    cap trips.
+    """
+    with _abandoned_lock:
+        _reap_abandoned_locked()
+        return {"live": len(_abandoned), "total": _abandoned_total,
+                "cap": ABANDONED_WORKER_CAP}
+
+
 def _call_with_timeout(fn: Callable, i: int, timeout: float):
     """Run ``fn(i)`` bounded by ``timeout`` seconds (0 = unbounded).
 
     The fetch runs on a daemon worker thread; an overrun raises
     :class:`ChunkFetchTimeout` and abandons the worker (the fetch is
-    pure, so its late result is simply never read).
+    pure, so its late result is simply never read). Abandoned workers
+    are tracked and capped — see :class:`FetchCapacityError` — so
+    repeated timeouts leak a bounded number of threads, not one per
+    retry forever.
     """
     if timeout <= 0:
         return fn(i)
+    global _abandoned_total
+    with _abandoned_lock:
+        _reap_abandoned_locked()
+        if len(_abandoned) >= ABANDONED_WORKER_CAP:
+            raise FetchCapacityError(
+                f"chunk {i}: {len(_abandoned)} abandoned fetch workers "
+                f"are still running (cap {ABANDONED_WORKER_CAP}) — the "
+                "source is hanging persistently; refusing to park "
+                "another thread on it")
     box = {}
 
     def run():
@@ -174,6 +235,9 @@ def _call_with_timeout(fn: Callable, i: int, timeout: float):
     t.start()
     t.join(timeout)
     if t.is_alive():
+        with _abandoned_lock:
+            _abandoned.append(t)
+            _abandoned_total += 1
         raise ChunkFetchTimeout(
             f"chunk {i}: fetch exceeded the {timeout:g}s per-fetch "
             "timeout (the worker thread was abandoned)")

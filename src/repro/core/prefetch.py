@@ -109,8 +109,8 @@ from .sparse_scd import select_sparse
 from .types import SolverConfig, SparseKP
 
 __all__ = ["HostChunkSource", "host_array_source", "memmap_source",
-           "callable_source", "sharded_source", "solve_streaming_host",
-           "source_fingerprint"]
+           "callable_source", "sharded_source", "chunk_hashes",
+           "solve_streaming_host", "source_fingerprint"]
 
 # Resume-state phases (the "epoch cursor" of the checkpoint): the solve
 # is either still iterating multipliers or inside the finalize pass.
@@ -183,6 +183,32 @@ def memmap_source(p_path, b_path, n: int, k: int, budgets,
     p = np.memmap(p_path, dtype=dtype, mode="r", shape=(n, k))
     b = np.memmap(b_path, dtype=dtype, mode="r", shape=(n, k))
     return host_array_source(p, b, budgets, chunk)
+
+
+def chunk_hashes(source: HostChunkSource, chunks=None) -> np.ndarray:
+    """Per-chunk sha256 content digests of a host source, as (c, 32) uint8.
+
+    Hashes the exact float32 payload bytes (``p`` then ``b``) each chunk
+    index serves — the same bytes the solver consumes and the
+    fingerprint's chunk-0 probe hashes — so two sources whose digests
+    match for a chunk are byte-identical there. This is the identity a
+    *real* (file-backed, non-synthetic) source brings to delta refresh:
+    :func:`repro.serve.engine.content_chunk_diff` compares the previous
+    generation's digests to the new ones and re-streams only chunks
+    whose content actually changed (DESIGN.md §11). ``chunks`` restricts
+    the scan to specific indices (returned in that order); the default
+    hashes all of them — one sequential O(n·K) read, the price of not
+    having a generator's closed-form diff.
+    """
+    if chunks is None:
+        chunks = range(-(-source.n // source.chunk))
+    out = np.zeros((len(chunks), 32), np.uint8)
+    for j, i in enumerate(chunks):
+        p, b = source.fn(int(i))
+        h = hashlib.sha256(np.asarray(p, np.float32).tobytes())
+        h.update(np.asarray(b, np.float32).tobytes())
+        out[j] = np.frombuffer(h.digest(), np.uint8)
+    return out
 
 
 def callable_source(fn, n: int, k: int, budgets, chunk: int) -> HostChunkSource:

@@ -16,6 +16,7 @@ from .engine import (  # noqa: F401
     Generation,
     RefreshEngine,
     WorkloadSpec,
+    content_chunk_diff,
     synthetic_chunk_diff,
     synthetic_source,
 )

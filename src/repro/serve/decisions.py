@@ -51,7 +51,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.chunked import decisions_rows
-from ..core.faults import ChunkFetchError, fetch_with_retries
+from ..core.faults import (ChunkFetchError, abandoned_workers,
+                           fetch_with_retries)
 from ..core.prefetch import HostChunkSource
 
 __all__ = ["DecisionService", "LookupResult"]
@@ -116,13 +117,17 @@ class DecisionService:
 
     def __init__(self, source, generation, cache_chunks: int = 16,
                  fault_policy=None, verify: bool = False,
-                 fallback: Optional[tuple] = None):
+                 fallback: Optional[tuple] = None, supervisor_root=None):
         if cache_chunks < 1:
             raise ValueError(f"cache_chunks must be >= 1, "
                              f"got {cache_chunks}")
         self.cache_chunks = cache_chunks
         self.fault_policy = fault_policy
         self.verify = verify
+        # Optional supervision surface: a directory whose SUPERVISOR.json
+        # (written by repro.launch.supervisor) is merged into health() —
+        # restarts, takeovers and lease ages next to the serving counters.
+        self.supervisor_root = supervisor_root
         # One LRU across generations: entries are keyed by (generation
         # fingerprint, chunk index), so a rebind keeps the old entries
         # harmless (they can only answer for their own generation) and
@@ -291,9 +296,17 @@ class DecisionService:
         answered by the fallback generation — degraded but alive;
         ``fetch_failures`` without matching ``stale_serves`` means
         queries are *failing* (no fallback covered them).
+        ``abandoned_fetch_workers`` / ``abandoned_fetch_total`` surface
+        the process-wide leaked-worker counters of the timeout layer
+        (:func:`repro.core.faults.abandoned_workers`) — a backend that
+        hangs instead of erroring shows up here. When the service was
+        built with a ``supervisor_root``, the supervisor's status
+        document (restarts, hang takeovers, lease ages) is merged in
+        under ``"supervisor"``.
         """
         fb = self._fallback
-        return {
+        leaked = abandoned_workers()
+        out = {
             **self.stats,
             "generation": self._current.generation.gen,
             "fallback_generation": (None if fb is None
@@ -301,4 +314,12 @@ class DecisionService:
             "cached_chunks": len(self._cache),
             "cache_chunks": self.cache_chunks,
             "degraded": self.stats["stale_serves"] > 0,
+            "abandoned_fetch_workers": leaked["live"],
+            "abandoned_fetch_total": leaked["total"],
         }
+        if self.supervisor_root is not None:
+            from ..checkpoint import ckpt
+
+            out["supervisor"] = ckpt.read_json(self.supervisor_root,
+                                               "SUPERVISOR.json")
+        return out

@@ -62,13 +62,15 @@ from ..checkpoint import ckpt
 from ..core.faults import ChunkFetchError, policy_from_cfg
 from ..core.prefetch import (
     HostChunkSource,
+    chunk_hashes,
     solve_streaming_host,
     source_fingerprint,
 )
 from ..core.types import SolverConfig
 
 __all__ = ["WorkloadSpec", "Generation", "RefreshEngine",
-           "synthetic_source", "synthetic_chunk_diff"]
+           "synthetic_source", "synthetic_chunk_diff",
+           "content_chunk_diff"]
 
 _POINTER = "LIVE.json"
 _FAILED = "FAILED.json"
@@ -163,6 +165,38 @@ def synthetic_chunk_diff(old: WorkloadSpec, new: WorkloadSpec):
         return np.zeros((c_new,), bool)
     idx = np.arange(c_new)
     return ~((idx + 1) * new.chunk <= min(old.n, new.n))
+
+
+def content_chunk_diff(make_source):
+    """A ``chunk_diff`` for *real* (non-generator) sources, by content.
+
+    The synthetic diff above reasons about generator parameters; a
+    file-backed workload (``memmap_source`` over yesterday's and today's
+    extracts) has no closed form — but it has bytes. The returned
+    callable hashes every chunk of both specs' sources
+    (:func:`repro.core.prefetch.chunk_hashes`, sha256 over the exact
+    f32 payload) and marks chunk i changed iff its digests differ;
+    chunks past the old source's end are changed by definition. Layout
+    changes (``k``/``chunk``) return None — nothing is inheritable when
+    chunk boundaries moved. The two full hashing scans are sequential
+    O(n·K) *reads* (no solve, no device work): worth it exactly when the
+    day-over-day delta is sparse, which is the delta-refresh premise
+    (DESIGN.md §11).
+
+        engine = RefreshEngine(root, spec, make_source=my_memmap_factory,
+                               chunk_diff=content_chunk_diff(my_memmap_factory))
+    """
+    def diff(old: WorkloadSpec, new: WorkloadSpec):
+        if (old.k, old.chunk) != (new.k, new.chunk):
+            return None
+        old_h = chunk_hashes(make_source(old))
+        new_h = chunk_hashes(make_source(new))
+        m = min(len(old_h), len(new_h))
+        changed = np.ones((len(new_h),), bool)
+        changed[:m] = ~(old_h[:m] == new_h[:m]).all(axis=1)
+        return changed
+
+    return diff
 
 
 class Generation(NamedTuple):
@@ -548,6 +582,12 @@ class RefreshEngine:
         generation with an explicit ``stale=True`` flag instead of
         failing the query. No previous generation (gen 0, or pruned):
         no fallback.
+
+        The service's :meth:`~repro.serve.decisions.DecisionService.
+        health` also reports this root's supervision status: when the
+        refreshes run under ``repro.launch.supervisor`` the coordinator
+        publishes ``SUPERVISOR.json`` (restarts, hang takeovers, lease
+        ages) into the same root, and the service surfaces it.
         """
         from .decisions import DecisionService
 
@@ -566,4 +606,4 @@ class RefreshEngine:
                                cache_chunks=cache_chunks,
                                fault_policy=policy_from_cfg(self.cfg),
                                verify=self.cfg.verify_refetch,
-                               fallback=fb)
+                               fallback=fb, supervisor_root=self.root)

@@ -548,3 +548,92 @@ def test_write_json_fsyncs_before_and_after_flip(tmp_path, monkeypatch):
     assert events[:ri].count("fsync") >= 1
     assert "fsync" in events[ri + 1:]
     assert ckpt.read_json(tmp_path, "LIVE.json") == {"gen": 1}
+
+
+# ---------------------------------------------------------------------------
+# Abandoned-worker accounting: repeated timeouts leak a bounded number
+# of threads, and the leak is observable.
+# ---------------------------------------------------------------------------
+
+def _drain_abandoned(release=None, timeout_s=10.0):
+    """Release hung fakes (if any) and wait for the live count to reach 0."""
+    import repro.core.faults as faults_mod
+    if release is not None:
+        release.set()
+    deadline = time.time() + timeout_s
+    while faults_mod.abandoned_workers()["live"] > 0 \
+            and time.time() < deadline:
+        time.sleep(0.01)
+    assert faults_mod.abandoned_workers()["live"] == 0
+
+
+def test_abandoned_workers_counted_and_reaped():
+    import threading
+
+    import repro.core.faults as faults_mod
+
+    _drain_abandoned()
+    release = threading.Event()
+
+    def hang(i):
+        release.wait(30)
+        return ("p", "b")
+
+    policy = FaultPolicy(max_retries=1, backoff_base=1e-5, timeout=0.02)
+    before = faults_mod.abandoned_workers()["total"]
+    with pytest.raises(ChunkFetchError):
+        fetch_with_retries(hang, 0, policy, sleep=lambda s: None)
+    stats = faults_mod.abandoned_workers()
+    # Two attempts, both timed out and abandoned, both still alive.
+    assert stats["total"] == before + 2
+    assert stats["live"] == 2
+    # Released workers die and are reaped from the live count; the
+    # monotone total stays.
+    _drain_abandoned(release)
+    assert faults_mod.abandoned_workers()["total"] == before + 2
+
+
+def test_abandoned_cap_fails_fast_and_is_retryable(monkeypatch):
+    import threading
+
+    import repro.core.faults as faults_mod
+    from repro.core.faults import FetchCapacityError
+
+    _drain_abandoned()
+    release = threading.Event()
+
+    def hang(i):
+        release.wait(30)
+        return ("p", "b")
+
+    try:
+        monkeypatch.setattr(faults_mod, "ABANDONED_WORKER_CAP", 2)
+        policy = FaultPolicy(max_retries=0, backoff_base=1e-5, timeout=0.02)
+        for i in range(2):
+            with pytest.raises(ChunkFetchError):
+                fetch_with_retries(hang, i, policy, sleep=lambda s: None)
+        # At the cap: the next timed fetch refuses to park another
+        # thread — fast, retryable, and the exhaustion names the cause.
+        with pytest.raises(ChunkFetchError, match="abandoned fetch"):
+            fetch_with_retries(hang, 9, policy, sleep=lambda s: None)
+        assert issubclass(FetchCapacityError, IOError)   # retryable class
+        assert faults_mod.abandoned_workers()["live"] == 2, \
+            "the capped call must not have spawned a third worker"
+    finally:
+        _drain_abandoned(release)
+
+
+def test_health_surfaces_leaked_workers_and_supervisor_doc(tmp_path):
+    eng, g0, g1 = _two_generations(tmp_path)
+    svc = eng.decision_service()
+    h = svc.health()
+    assert {"abandoned_fetch_workers", "abandoned_fetch_total"} <= set(h)
+    assert h["abandoned_fetch_workers"] == 0
+    # No supervisor has run over this root yet: explicit None.
+    assert h["supervisor"] is None
+    # A supervisor status document in the engine root is surfaced as-is.
+    ckpt.write_json(tmp_path, "SUPERVISOR.json",
+                    {"state": "done", "hang_takeovers": 1, "restarts": 2})
+    h = svc.health()
+    assert h["supervisor"]["hang_takeovers"] == 1
+    assert h["supervisor"]["restarts"] == 2

@@ -312,3 +312,124 @@ def test_sigkill_mid_delta_refresh_resume_bitwise(tmp_path):
     for key in ["lam", "tau", "iters", "r", "primal", "dual", "ch", "gh",
                 "warm", "active"]:
         np.testing.assert_array_equal(got[key], want[key], err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# Real (file-backed) sources: content-hash chunk_diff over memmaps.
+# ---------------------------------------------------------------------------
+
+from repro.core.prefetch import chunk_hashes, memmap_source  # noqa: E402
+from repro.serve.engine import content_chunk_diff  # noqa: E402
+
+_EDIT_CHUNK = 3
+
+
+def _write_days(tmp_path):
+    """Two on-disk (n, k) f32 extracts: day 1 = day 0 with ONE chunk
+    edited. Bytes come from the banded synthetic source so screening
+    retires chunks exactly as in the generator-backed tests."""
+    base = synthetic_source(SPEC)
+    c = -(-SPEC.n // SPEC.chunk)
+    p0 = np.concatenate([base.fn(i)[0] for i in range(c)])[:SPEC.n]
+    b0 = np.concatenate([base.fn(i)[1] for i in range(c)])[:SPEC.n]
+    p1 = p0.copy()
+    lo = _EDIT_CHUNK * SPEC.chunk
+    p1[lo:lo + SPEC.chunk] *= np.float32(1.25)     # today's edit
+    paths = {}
+    for day, (p, b) in enumerate([(p0, b0), (p1, b0)]):
+        pp = tmp_path / f"day{day}_p.bin"
+        bp = tmp_path / f"day{day}_b.bin"
+        p.astype(np.float32).tofile(pp)
+        b.astype(np.float32).tofile(bp)
+        paths[day] = (pp, bp)
+    return paths, np.asarray(base.budgets)
+
+
+def _memmap_factory(paths, budgets):
+    """spec -> memmap_source; spec.seed - SPEC.seed picks the day."""
+    def make(spec):
+        pp, bp = paths[spec.seed - SPEC.seed]
+        return memmap_source(pp, bp, spec.n, spec.k, budgets, spec.chunk)
+
+    return make
+
+
+def test_content_chunk_diff_contract(tmp_path):
+    paths, budgets = _write_days(tmp_path)
+    make = _memmap_factory(paths, budgets)
+    diff = content_chunk_diff(make)
+    day0, day1 = SPEC, SPEC.replace(seed=SPEC.seed + 1)
+
+    # Identity: byte-identical sources -> zero changed chunks.
+    assert not diff(day0, day0).any()
+    # The edited chunk — and only it — is marked changed.
+    changed = diff(day0, day1)
+    c = -(-SPEC.n // SPEC.chunk)
+    assert changed.shape == (c,)
+    assert changed[_EDIT_CHUNK] and changed.sum() == 1
+    # Layout changes inherit nothing.
+    assert diff(day0, day1.replace(chunk=200)) is None
+    assert diff(day0, day1.replace(k=SPEC.k + 1)) is None
+    # Growth over the same file: the overlap is unchanged, chunks past
+    # the old end are changed by definition.
+    shrunk = day0.replace(n=SPEC.n - 2 * SPEC.chunk)
+    grown = diff(shrunk, day0)
+    assert not grown[:-2].any() and grown[-2:].all()
+
+
+def test_chunk_hashes_match_iff_bytes_match(tmp_path):
+    paths, budgets = _write_days(tmp_path)
+    make = _memmap_factory(paths, budgets)
+    h0 = chunk_hashes(make(SPEC))
+    h1 = chunk_hashes(make(SPEC.replace(seed=SPEC.seed + 1)))
+    same = (h0 == h1).all(axis=1)
+    assert not same[_EDIT_CHUNK] and same.sum() == len(same) - 1
+    # Restricted scan returns the requested chunks in order.
+    sub = chunk_hashes(make(SPEC), chunks=[_EDIT_CHUNK, 0])
+    np.testing.assert_array_equal(sub[0], h0[_EDIT_CHUNK])
+    np.testing.assert_array_equal(sub[1], h0[0])
+
+
+def test_memmap_delta_restreams_only_the_edited_chunk(tmp_path):
+    """End to end on a file-backed workload: day-over-day refresh with
+    the content diff re-streams the parent's survivors plus exactly the
+    one edited chunk, and publishes the full-restream engine's bits."""
+    paths, budgets = _write_days(tmp_path)
+    raw = _memmap_factory(paths, budgets)
+
+    calls = {"n": 0}
+
+    def counting(spec):
+        src = raw(spec)
+        inner = src.fn
+
+        def fn(i):
+            calls["n"] += 1
+            return inner(i)
+
+        return src._replace(fn=fn)
+
+    day1 = SPEC.replace(seed=SPEC.seed + 1)
+    delta_eng = RefreshEngine(tmp_path / "delta", SPEC, make_source=counting,
+                              cfg=CFG, chunk_diff=content_chunk_diff(raw))
+    full_eng = RefreshEngine(tmp_path / "full", SPEC, make_source=raw,
+                             cfg=CFG)
+    assert full_eng.chunk_diff is None     # custom sources default cold
+
+    p_delta, p_full = delta_eng.refresh(), full_eng.refresh()
+    _assert_gen_equal(p_delta, p_full)
+    g_delta = delta_eng.refresh(seed=day1.seed)
+    g_full = full_eng.refresh(seed=day1.seed)
+    _assert_gen_equal(g_delta, g_full)
+
+    changed = content_chunk_diff(raw)(SPEC, day1)
+    parent_active = np.asarray(_record(p_delta)["screen_active"]).astype(bool)
+    inherited = int(parent_active[~changed].sum())
+    expect = inherited + int(changed.sum())
+    sd = _streamed(g_delta)
+    assert sd[0] == expect, (sd, inherited, changed)
+    # The edited chunk was genuinely re-streamed even if the parent had
+    # retired it.
+    c = -(-SPEC.n // SPEC.chunk)
+    assert _streamed(g_full)[0] == c
+    assert sd.sum() < _streamed(g_full).sum()

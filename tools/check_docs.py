@@ -32,9 +32,12 @@ PUBLIC_API = [
     "src/repro/core/postprocess.py",
     "src/repro/core/types.py",
     "src/repro/core/sparse_scd.py",
+    "src/repro/core/heartbeat.py",
     "src/repro/kernels/__init__.py",
     "src/repro/kernels/ops.py",
     "src/repro/launch/solve.py",
+    "src/repro/launch/env.py",
+    "src/repro/launch/supervisor.py",
     "src/repro/data/synth.py",
 ]
 
