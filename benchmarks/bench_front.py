@@ -1,0 +1,98 @@
+"""Serving-front bench: sustained HTTP lookup QPS under refresh churn.
+
+``PYTHONPATH=src python -m benchmarks.bench_front [--smoke] [--out PATH]``
+
+The request-path extension of ``bench_serve`` (which measures
+*in-process* lookups — 659k single-lookup QPS on this container): here
+the lookups cross a real HTTP front into DecisionService **replica
+processes** (``repro/serve/front.py``) while the generation engine
+refreshes and prunes underneath, so the number is the end-to-end
+serving figure: wire encoding + round-robin + the replica's service
+lock + live rebinds, all included.
+
+What the report claims, and how it is gated:
+
+* **Bitwise parity is the hard claim**: every answered row is compared
+  against the full materialisation of the generation that answered it,
+  and the ``/diff`` endpoint against the brute-force comparison of two
+  generations' decision matrices. The bench exits 1 on any mismatch;
+  ``tools/bench_diff.py`` re-checks the committed flags.
+* **Diff pass accounting is deterministic**: the first diff against a
+  baseline costs exactly one grouped chunk pass (``chunks`` fills) on
+  the baseline generation, and repeats cost zero on both (two cached
+  generations) — gated exactly by ``bench_diff``.
+* **Sustained batched QPS** is gated within the usual generous wall
+  tolerance (CI wall clocks are noisy; a front that serialises on a
+  global lock shows up far beyond it). Single-lookup QPS is recorded,
+  not gated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+
+from repro.core import SolverConfig  # noqa: E402
+from repro.launch.front import run_front_scenario  # noqa: E402
+from repro.serve import WorkloadSpec  # noqa: E402
+
+K, Q, REPLICAS = 8, 2, 2
+# (n, chunk, generations): the smoke point is shared with CI so
+# bench_diff can match points by n against the committed report.
+GRID = [(8192, 512, 3), (32768, 2048, 3)]
+SMOKE_GRID = [(8192, 512, 3)]
+
+
+def bench_point(n, chunk, generations, seed=0, max_iters=60):
+    spec = WorkloadSpec(seed=seed, n=n, k=K, chunk=chunk, q=Q,
+                        tightness=0.4)
+    cfg = SolverConfig(reduce="bucketed", max_iters=max_iters,
+                       checkpoint_every=0)
+    with tempfile.TemporaryDirectory(prefix="bench_front_") as root:
+        return run_front_scenario(spec, generations, root, cfg,
+                                  replicas=REPLICAS)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small point (CI-friendly)")
+    ap.add_argument("--out", default="BENCH_front.json")
+    args = ap.parse_args()
+
+    points = []
+    print("n,replicas,batched_qps,single_qps,parity,diff_parity")
+    for n, chunk, generations in (SMOKE_GRID if args.smoke else GRID):
+        p = bench_point(n, chunk, generations)
+        points.append(p)
+        print(f"{n},{p['replicas']},{p['sustained']['batched_qps']},"
+              f"{p['sustained']['single_qps']},{p['parity']},"
+              f"{p['diff']['parity']}")
+
+    report = {
+        "bench": "front",
+        "backend": jax.default_backend(),
+        "points": points,
+    }
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+    bad = [p["n"] for p in points
+           if not p["parity"] or not p["diff"]["parity"]
+           or p["stale_rows"] != 0
+           or not all(r >= 1 for r in p["rebinds"])]
+    if bad:
+        print(f"REGRESSION: front parity/diff/rebind failure at n={bad}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

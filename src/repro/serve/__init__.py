@@ -9,7 +9,11 @@ on a daily basis") on top of the streaming solver:
     decisions.DecisionService — O(chunk) point/batched lookups against
         the live generation, bitwise-equal to full materialisation;
         retrying chunk regeneration + degraded (stale-flagged) fallback
-        to the previous generation under the core/faults.py policy.
+        to the previous generation under the core/faults.py policy;
+    front.Front / ReplicaServer — the HTTP/RPC request path: N replica
+        processes each hosting a DecisionService with a LIVE-pointer
+        watcher, round-robined behind a ThreadingHTTPServer front with
+        aggregated /health and the cross-generation /diff endpoint.
 """
 from .decisions import DecisionService, LookupResult  # noqa: F401
 from .engine import (  # noqa: F401
@@ -19,4 +23,11 @@ from .engine import (  # noqa: F401
     content_chunk_diff,
     synthetic_chunk_diff,
     synthetic_source,
+)
+from .front import (  # noqa: F401
+    Front,
+    FrontRPCError,
+    ReplicaClient,
+    ReplicaServer,
+    decision_diff,
 )

@@ -38,10 +38,23 @@ generation (the previously published one): the answer comes from the
 fallback's decisions with an explicit ``stale=True`` flag, and
 :meth:`health` accounts retries, fetch failures and stale serves so the
 degradation is observable, never silent.
+
+Thread safety: the service is safe to hammer from concurrent request
+threads (the HTTP/RPC front in :mod:`repro.serve.front` does exactly
+that) while :meth:`rebind` follows pointer flips underneath. Every
+lookup snapshots the ``(current, fallback)`` binding pair **once**
+under the service lock and answers entirely from that snapshot — a
+concurrent rebind can never mix two generations inside one call (bounds
+validated against one generation, rows filled from another) or leave
+the degraded path reading a fallback that a rebind just replaced. The
+lock also serialises the LRU mutations and the ``stats`` counters;
+the jitted chunk fill itself runs *outside* the lock, so concurrent
+misses on different chunks still overlap.
 """
 from __future__ import annotations
 
 import functools
+import threading
 from collections import OrderedDict
 from typing import Iterable, NamedTuple, Optional
 
@@ -135,6 +148,9 @@ class DecisionService:
         self._cache: OrderedDict = OrderedDict()
         self.stats = {"queries": 0, "hits": 0, "fills": 0, "evictions": 0,
                       "retries": 0, "fetch_failures": 0, "stale_serves": 0}
+        # The service lock: held around cache/stats mutation and the
+        # binding swap — never around a fetch or the jitted fill.
+        self._lock = threading.Lock()
         self._current = self._bind(source, generation)
         self._fallback = (self._bind(*fallback)
                           if fallback is not None else None)
@@ -158,6 +174,18 @@ class DecisionService:
             q=generation.spec.q,
             key=np.asarray(generation.fingerprint, np.uint8).tobytes(),
             fn=_jit_rows(generation.spec.q))
+
+    def _snapshot(self):
+        """The ``(current, fallback)`` binding pair, read atomically.
+
+        Every public query snapshots once and answers from the
+        snapshot: a concurrent :meth:`rebind` swaps both references
+        under the same lock, so a call either sees the pre-flip pair or
+        the post-flip pair — never the current of one generation with
+        the fallback of another.
+        """
+        with self._lock:
+            return self._current, self._fallback
 
     # -- binding surface (kept for callers that predate degraded mode) ---
 
@@ -184,21 +212,27 @@ class DecisionService:
     def rebind(self, source, generation):
         """Follow a pointer flip: bind the new generation, demote the old.
 
-        The previous binding becomes the degraded-mode fallback. The
-        chunk cache is *not* cleared — its entries are keyed by
-        generation fingerprint, so the new generation can never hit the
-        old generation's chunks (the cross-generation regression test
-        pins this), while the demoted generation's warm entries keep
-        serving the fallback path for free.
+        The previous binding becomes the degraded-mode fallback; both
+        references swap under the service lock in one step, so an
+        in-flight lookup observes either the old pair or the new pair
+        (its own snapshot — see :meth:`_snapshot`). The chunk cache is
+        *not* cleared — its entries are keyed by generation
+        fingerprint, so the new generation can never hit the old
+        generation's chunks (the cross-generation regression test pins
+        this), while the demoted generation's warm entries keep serving
+        the fallback path for free.
         """
-        old = self._current
-        self._current = self._bind(source, generation)
-        self._fallback = old
+        new = self._bind(source, generation)   # jit lookup outside the lock
+        with self._lock:
+            old = self._current
+            self._current = new
+            self._fallback = old
 
     # -- the chunk pipeline ------------------------------------------------
 
     def _on_retry(self, chunk, attempt, err, delay):
-        self.stats["retries"] += 1
+        with self._lock:
+            self.stats["retries"] += 1
 
     def _fetch(self, bound: _Bound, ci: int):
         if isinstance(bound.source, HostChunkSource):
@@ -213,25 +247,59 @@ class DecisionService:
         return bound.source.fn(jnp.int32(ci))
 
     def _chunk_decisions(self, bound: _Bound, ci: int) -> np.ndarray:
-        """(chunk, K) bool decisions for chunk ``ci``, through the LRU."""
+        """(chunk, K) bool decisions for chunk ``ci``, through the LRU.
+
+        The cache probe and the insert each hold the service lock; the
+        fetch + jitted fill between them run unlocked, so concurrent
+        misses overlap. Two threads racing a miss on the same chunk
+        both fill (deterministically identical bytes — the second
+        insert is a no-op overwrite) and each counts exactly one of
+        hits/fills, keeping ``hits + fills == chunk requests`` exact
+        under any interleaving.
+        """
         key = (bound.key, ci)
-        hit = self._cache.get(key)
-        if hit is not None:
-            self.stats["hits"] += 1
-            self._cache.move_to_end(key)
-            return hit
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self.stats["hits"] += 1
+                self._cache.move_to_end(key)
+                return hit
         p, b = self._fetch(bound, ci)
         rows = ci * bound.source.chunk + np.arange(bound.source.chunk)
         valid = jnp.asarray(rows < bound.source.n)
         x = np.asarray(bound.fn(p, b, bound.lam, valid, bound.tau))
-        self.stats["fills"] += 1
-        self._cache[key] = x
-        if len(self._cache) > self.cache_chunks:
-            self._cache.popitem(last=False)
-            self.stats["evictions"] += 1
+        with self._lock:
+            self.stats["fills"] += 1
+            self._cache[key] = x
+            while len(self._cache) > self.cache_chunks:
+                self._cache.popitem(last=False)
+                self.stats["evictions"] += 1
         return x
 
     # -- lookups -----------------------------------------------------------
+
+    def _lookup(self, cur: _Bound, fb: Optional[_Bound],
+                user: int) -> LookupResult:
+        """One lookup against an explicit binding snapshot."""
+        n, chunk = cur.source.n, cur.source.chunk
+        user = int(user)
+        if not 0 <= user < n:
+            raise IndexError(f"user {user} outside [0, {n})")
+        with self._lock:
+            self.stats["queries"] += 1
+        try:
+            row = self._chunk_decisions(cur, user // chunk)[user % chunk]
+            return LookupResult(row, False, cur.generation.gen)
+        except ChunkFetchError:
+            with self._lock:
+                self.stats["fetch_failures"] += 1
+            if fb is None or user >= fb.source.n:
+                raise
+            row = self._chunk_decisions(
+                fb, user // fb.source.chunk)[user % fb.source.chunk]
+            with self._lock:
+                self.stats["stale_serves"] += 1
+            return LookupResult(row, True, fb.generation.gen)
 
     def lookup(self, user: int) -> LookupResult:
         """The decision row for one user, with staleness provenance.
@@ -242,30 +310,44 @@ class DecisionService:
         covers the user, the fallback's decision is returned with
         ``stale=True``. With no fallback (or one the user outgrew) the
         fetch error propagates: an explicit failure beats a silently
-        wrong answer.
+        wrong answer. The ``(current, fallback)`` pair is snapshotted
+        once — a rebind mid-call cannot redirect the degraded path to
+        a different generation than the one that failed.
         """
-        cur = self._current
-        n, chunk = cur.source.n, cur.source.chunk
-        user = int(user)
-        if not 0 <= user < n:
-            raise IndexError(f"user {user} outside [0, {n})")
-        self.stats["queries"] += 1
-        try:
-            row = self._chunk_decisions(cur, user // chunk)[user % chunk]
-            return LookupResult(row, False, cur.generation.gen)
-        except ChunkFetchError:
-            self.stats["fetch_failures"] += 1
-            fb = self._fallback
-            if fb is None or user >= fb.source.n:
-                raise
-            row = self._chunk_decisions(
-                fb, user // fb.source.chunk)[user % fb.source.chunk]
-            self.stats["stale_serves"] += 1
-            return LookupResult(row, True, fb.generation.gen)
+        cur, fb = self._snapshot()
+        return self._lookup(cur, fb, user)
 
     def decide(self, user: int) -> np.ndarray:
         """The (K,) bool decision row for one user of the generation."""
         return self.lookup(user).x
+
+    def lookup_batch(self, users: Iterable[int]):
+        """Batched lookups with per-row provenance.
+
+        Returns ``(x (m, K) bool, stale (m,) bool, gens (m,) int64)`` —
+        the rows in input order plus, per row, whether it was served
+        degraded and by which generation. The whole batch answers from
+        **one** binding snapshot: bounds are validated against the same
+        generation that fills the rows, whatever ``rebind`` does
+        concurrently (the injected-rebind regression test pins this).
+        Owning chunks are regenerated at most once per call (grouped
+        fills), so a batch over m users touches min(m, chunks-spanned)
+        chunks per generation that answers.
+        """
+        cur, fb = self._snapshot()
+        users = np.asarray(list(users), np.int64)
+        n, chunk = cur.source.n, cur.source.chunk
+        if users.size and (users.min() < 0 or users.max() >= n):
+            bad = users[(users < 0) | (users >= n)][0]
+            raise IndexError(f"user {int(bad)} outside [0, {n})")
+        x = np.zeros((users.size, cur.source.k), bool)
+        stale = np.zeros(users.size, bool)
+        gens = np.full(users.size, cur.generation.gen, np.int64)
+        order = np.argsort(users // chunk, kind="stable")
+        for j in order:
+            res = self._lookup(cur, fb, int(users[j]))
+            x[j], stale[j], gens[j] = res.x, res.stale, res.gen
+        return x, stale, gens
 
     def decide_batch(self, users: Iterable[int]) -> np.ndarray:
         """(len(users), K) bool decisions, chunk-grouped source access.
@@ -273,18 +355,10 @@ class DecisionService:
         Queries are answered in input order but the owning chunks are
         each regenerated at most once per call (grouped fills), so a
         batch over m users touches min(m, chunks-spanned) chunks.
-        Degraded lookups fall back per user (see :meth:`lookup`).
+        Degraded lookups fall back per user (see :meth:`lookup`); use
+        :meth:`lookup_batch` when the per-row provenance matters.
         """
-        users = np.asarray(list(users), np.int64)
-        n, chunk = self._current.source.n, self._current.source.chunk
-        if users.size and (users.min() < 0 or users.max() >= n):
-            bad = users[(users < 0) | (users >= n)][0]
-            raise IndexError(f"user {int(bad)} outside [0, {n})")
-        out = np.zeros((users.size, self._current.source.k), bool)
-        order = np.argsort(users // chunk, kind="stable")
-        for j in order:
-            out[j] = self.lookup(int(users[j])).x
-        return out
+        return self.lookup_batch(users)[0]
 
     # -- observability -----------------------------------------------------
 
@@ -302,24 +376,40 @@ class DecisionService:
         hangs instead of erroring shows up here. When the service was
         built with a ``supervisor_root``, the supervisor's status
         document (restarts, hang takeovers, lease ages) is merged in
-        under ``"supervisor"``.
+        under ``"supervisor"`` — with an explicit ``{"status":
+        "absent"}`` when no SUPERVISOR.json has been written yet (a
+        configured-but-not-yet-started supervisor is not the same
+        observation as a dead one) and ``{"status": "unreadable"}``
+        when the document exists but cannot be parsed (externally
+        damaged): one bad supervisor file must degrade that field, not
+        take down the health endpoint.
         """
-        fb = self._fallback
         leaked = abandoned_workers()
+        with self._lock:
+            cur, fb = self._current, self._fallback
+            stats = dict(self.stats)
+            cached = len(self._cache)
         out = {
-            **self.stats,
-            "generation": self._current.generation.gen,
+            **stats,
+            "generation": cur.generation.gen,
             "fallback_generation": (None if fb is None
                                     else fb.generation.gen),
-            "cached_chunks": len(self._cache),
+            "cached_chunks": cached,
             "cache_chunks": self.cache_chunks,
-            "degraded": self.stats["stale_serves"] > 0,
+            "degraded": stats["stale_serves"] > 0,
             "abandoned_fetch_workers": leaked["live"],
             "abandoned_fetch_total": leaked["total"],
         }
         if self.supervisor_root is not None:
             from ..checkpoint import ckpt
 
-            out["supervisor"] = ckpt.read_json(self.supervisor_root,
-                                               "SUPERVISOR.json")
+            try:
+                doc = ckpt.read_json(self.supervisor_root,
+                                     "SUPERVISOR.json")
+            except ValueError as e:
+                out["supervisor"] = {"status": "unreadable",
+                                     "error": str(e)}
+            else:
+                out["supervisor"] = ({"status": "absent"} if doc is None
+                                     else doc)
         return out

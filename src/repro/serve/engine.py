@@ -269,6 +269,37 @@ class RefreshEngine:
                              "zero generations would delete the live one")
         self.keep = keep
 
+    @classmethod
+    def attach(cls, root, timeout: float = 0.0, poll_s: float = 0.05,
+               **kw) -> "RefreshEngine":
+        """An engine over an *existing* root, spec taken from the live
+        generation.
+
+        The replica-process entry point (:mod:`repro.serve.front`): a
+        serving replica knows only the generation root it shares with
+        the refresh writer, not the workload that seeded it — the live
+        generation's spec IS the base spec. Waits up to ``timeout``
+        seconds for a first generation to be published (a replica may
+        boot while gen 0 is still solving), then raises the usual "run
+        refresh() first" error. ``kw`` forwards to the constructor
+        (``make_source``, ``cfg``, ``keep``...).
+        """
+        import time
+
+        probe = cls(root, base_spec=None, **kw)
+        deadline = time.monotonic() + timeout
+        while True:
+            live = probe.live()
+            if live is not None:
+                probe.base_spec = live.spec
+                return probe
+            if time.monotonic() >= deadline:
+                raise ValueError(
+                    f"no live generation under {root} to attach to — "
+                    "run refresh() there first (or raise the attach "
+                    "timeout past the first publication)")
+            time.sleep(poll_s)
+
     # -- directory layout ---------------------------------------------------
 
     def _gen_dir(self, gen_id: int) -> pathlib.Path:

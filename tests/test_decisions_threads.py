@@ -1,0 +1,267 @@
+"""Thread-safety regressions for the decision service (ISSUE 9 bugfixes).
+
+Three bugs, each pinned by a failing-before/passing-after test:
+
+1. ``decide_batch`` used to read ``self._current`` three separate times
+   (bounds check, output shape, then again inside every ``lookup()``) —
+   a concurrent ``rebind()`` mid-call validated bounds against one
+   generation and answered from another, or raised ``IndexError`` for
+   users the *new* generation no longer covers. Now the whole batch
+   answers from one snapshot (injected-rebind tests below).
+2. The serve layer had zero synchronization: LRU mutations and the
+   ``stats`` counters raced under threaded lookups, and ``rebind()``'s
+   two-step ``_current``/``_fallback`` swap was not atomic with respect
+   to an in-flight ``lookup()`` — a fetch failure straddling a rebind
+   would retry the very generation that just failed instead of the
+   armed fallback. Now a service lock guards cache/stats/binding swap
+   (threaded stress with exact counter accounting below).
+3. ``health()`` with a configured ``supervisor_root`` but no
+   SUPERVISOR.json silently reported ``"supervisor": None`` —
+   indistinguishable from a dead supervisor — and a torn/unparseable
+   document raised straight through the health endpoint.
+"""
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import ckpt
+from repro.core import SolverConfig
+from repro.core.faults import FaultPolicy
+from repro.serve import (DecisionService, RefreshEngine, WorkloadSpec,
+                         synthetic_source)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPEC = WorkloadSpec(seed=3, n=1024, k=4, chunk=128, q=1, tightness=0.4)
+CFG = SolverConfig(reduce="bucketed", max_iters=25)
+SCALES = [1.0, 0.9, 0.8]
+
+
+@pytest.fixture(scope="module")
+def gens(tmp_path_factory):
+    """Three published generations + their full decision matrices."""
+    root = tmp_path_factory.mktemp("decisions_threads")
+    eng = RefreshEngine(root, SPEC, cfg=CFG)
+    out = {"engine": eng, "root": root, "gen": [], "ref": []}
+    for s in SCALES:
+        g = eng.refresh(budget_scale=s)
+        svc = DecisionService(synthetic_source(g.spec), g, cache_chunks=16)
+        out["gen"].append(g)
+        out["ref"].append(svc.decide_batch(np.arange(SPEC.n)))
+    return out
+
+
+def _svc(gen, **kw) -> DecisionService:
+    return DecisionService(synthetic_source(gen.spec), gen, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Bug 1: decide_batch must answer the whole batch from ONE binding.
+# ---------------------------------------------------------------------------
+
+class _RebindOnFirstChunk(DecisionService):
+    """Injects a rebind between the bounds check and the chunk fills —
+    exactly the window the un-snapshotted decide_batch was exposed in."""
+
+    def arm(self, source, generation):
+        self._inject = (source, generation)
+
+    def _chunk_decisions(self, bound, ci):
+        inject, self._inject = getattr(self, "_inject", None), None
+        if inject is not None:
+            self.rebind(*inject)
+        return super()._chunk_decisions(bound, ci)
+
+
+def test_decide_batch_rows_come_from_one_generation(gens):
+    """A rebind mid-batch must not switch later rows to the new
+    generation: bounds were validated and provenance is reported
+    against the snapshot."""
+    g0, g1 = gens["gen"][0], gens["gen"][1]
+    svc = _RebindOnFirstChunk(synthetic_source(g0.spec), g0,
+                              cache_chunks=16)
+    svc.arm(synthetic_source(g1.spec), g1)
+    users = np.arange(0, SPEC.n, 17)          # spans every chunk
+    x, stale, gens_served = svc.lookup_batch(users)
+    # Pre-fix: rows filled after the injected rebind came from gen 1
+    # (different multipliers -> different rows); the fixed batch is
+    # bitwise the snapshot generation's materialisation, end to end.
+    assert x.tobytes() == gens["ref"][0][users].tobytes()
+    assert (gens_served == g0.gen).all() and not stale.any()
+    # The service itself DID follow the flip (the injection ran).
+    assert svc.generation.gen == g1.gen
+
+
+def test_decide_batch_bounds_and_fills_use_same_generation(gens, tmp_path):
+    """Shrinking traffic (smaller n) mid-batch: users validated against
+    the snapshot generation must all be answered, not IndexError'd
+    against the rebound one."""
+    eng = RefreshEngine(tmp_path / "shrink", SPEC, cfg=CFG)
+    big = eng.refresh(budget_scale=1.0)                  # n = 1024
+    small = eng.refresh(budget_scale=0.95, n=SPEC.n // 2)  # n = 512
+    svc = _RebindOnFirstChunk(synthetic_source(big.spec), big,
+                              cache_chunks=16)
+    svc.arm(synthetic_source(small.spec), small)
+    users = np.array([3, 200, 600, 900, 1023])   # tail outside small's n
+    ref = _svc(big, cache_chunks=16).decide_batch(users)
+    x, stale, gens_served = svc.lookup_batch(users)   # pre-fix: IndexError
+    assert x.tobytes() == ref.tobytes()
+    assert (gens_served == big.gen).all() and not stale.any()
+
+
+# ---------------------------------------------------------------------------
+# Bug 2a: the degraded path must use the fallback snapshotted WITH the
+# current binding, not whatever a concurrent rebind just demoted.
+# ---------------------------------------------------------------------------
+
+_POISON_CHUNK = 2
+
+
+def _poison(source):
+    inner = source.fn
+
+    def fn(i):
+        if int(i) == _POISON_CHUNK:
+            raise IOError("injected permanent fault")
+        return inner(i)
+
+    return source._replace(fn=fn)
+
+
+class _RebindInFetch(DecisionService):
+    """Triggers a rebind inside the failing fetch — the racing window
+    between a lookup's current-read and its fallback-read."""
+
+    def arm(self, source, generation):
+        self._inject = (source, generation)
+
+    def _fetch(self, bound, ci):
+        inject = getattr(self, "_inject", None)
+        if inject is not None and int(ci) == _POISON_CHUNK:
+            self._inject = None
+            self.rebind(*inject)
+        return super()._fetch(bound, ci)
+
+
+def test_degraded_fallback_is_snapshotted_across_rebind(gens):
+    g0, g1, g2 = gens["gen"]
+    policy = FaultPolicy(max_retries=1, backoff_base=1e-6,
+                         backoff_cap=1e-5)
+    svc = _RebindInFetch(_poison(synthetic_source(g1.spec)), g1,
+                         cache_chunks=16, fault_policy=policy,
+                         fallback=(synthetic_source(g0.spec), g0))
+    svc.arm(synthetic_source(g2.spec), g2)
+    user = _POISON_CHUNK * SPEC.chunk + 5
+    res = svc.lookup(user)
+    # Pre-fix: the rebind demoted the (poisoned) current generation to
+    # fallback before the degraded path read self._fallback — the
+    # "fallback" fetch failed identically and the lookup raised.
+    # Post-fix the armed fallback pair is part of the snapshot.
+    assert res.stale and res.gen == g0.gen
+    assert res.x.tobytes() == gens["ref"][0][user].tobytes()
+    assert svc.stats["stale_serves"] == 1
+    assert svc.stats["fetch_failures"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Bug 2b: threaded lookups + rebind churn — exact counters, bitwise rows.
+# ---------------------------------------------------------------------------
+
+def test_threaded_lookups_under_rebind_churn_stay_exact(gens):
+    g0, g1 = gens["gen"][0], gens["gen"][1]
+    refs = {g0.gen: gens["ref"][0], g1.gen: gens["ref"][1]}
+    svc = _svc(g0, cache_chunks=3)        # tiny LRU: eviction churn too
+    n_threads, per_thread = 4, 250
+    results = [[] for _ in range(n_threads)]
+    errors = []
+    stop = threading.Event()
+
+    def reader(t):
+        rng = np.random.default_rng(100 + t)
+        try:
+            for j in range(per_thread):
+                if j % 5 == 0:
+                    users = rng.integers(0, SPEC.n, 8)
+                    x, stale, gs = svc.lookup_batch(users)
+                    assert not stale.any()
+                    for u, row, g in zip(users, x, gs):
+                        results[t].append((int(u), row.tobytes(), int(g)))
+                else:
+                    u = int(rng.integers(0, SPEC.n))
+                    r = svc.lookup(u)
+                    results[t].append((u, r.x.tobytes(), int(r.gen)))
+        except Exception as e:            # noqa: BLE001 — surfaced below
+            errors.append(repr(e))
+
+    def rebinder():
+        flip = 0
+        while not stop.is_set():
+            tgt = (g1, g0)[flip % 2]
+            svc.rebind(synthetic_source(tgt.spec), tgt)
+            flip += 1
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)           # stress the interleavings
+    try:
+        threads = [threading.Thread(target=reader, args=(t,))
+                   for t in range(n_threads)]
+        rb = threading.Thread(target=rebinder)
+        rb.start()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stop.set()
+        rb.join()
+    finally:
+        sys.setswitchinterval(old)
+
+    assert errors == []
+    total = sum(len(r) for r in results)
+    # Every row bitwise-equal to the generation that claims it.
+    for rows in results:
+        for u, raw, g in rows:
+            assert raw == refs[g][u].tobytes()
+    # Exact counter accounting under arbitrary interleaving: one query
+    # per lookup, each resolving to exactly one hit or fill. Lost
+    # updates (the pre-lock races dropped increments) break these
+    # equalities. Two threads racing a miss on the same chunk both
+    # count a fill while the second insert overwrites the first, so the
+    # cache holds at most fills - evictions entries — and never more
+    # than its configured capacity.
+    s = svc.stats
+    assert s["queries"] == total
+    assert s["hits"] + s["fills"] == s["queries"]
+    assert len(svc._cache) <= svc.cache_chunks
+    assert s["fills"] - s["evictions"] >= len(svc._cache)
+    assert s["stale_serves"] == 0 and s["fetch_failures"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Bug 3: supervisor health must distinguish absent / present / damaged.
+# ---------------------------------------------------------------------------
+
+def test_health_supervisor_absent_is_explicit(gens):
+    svc = gens["engine"].decision_service()
+    h = svc.health()
+    # Pre-fix: None — indistinguishable from "supervisor died and its
+    # document vanished". Now an explicit status document.
+    assert h["supervisor"] == {"status": "absent"}
+
+
+def test_health_survives_unreadable_supervisor_doc(gens):
+    root = gens["root"]
+    svc = gens["engine"].decision_service()
+    ckpt.write_json(root, "SUPERVISOR.json", {"state": "running"})
+    assert svc.health()["supervisor"]["state"] == "running"
+    # External damage: torn/garbage bytes where the document should be.
+    (root / "SUPERVISOR.json").write_text("{not json", encoding="utf-8")
+    h = svc.health()                      # pre-fix: ValueError escapes
+    assert h["supervisor"]["status"] == "unreadable"
+    assert "SUPERVISOR.json" in h["supervisor"]["error"]
+    assert h["generation"] == gens["gen"][-1].gen
+    (root / "SUPERVISOR.json").unlink()   # leave the root clean

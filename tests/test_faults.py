@@ -629,8 +629,9 @@ def test_health_surfaces_leaked_workers_and_supervisor_doc(tmp_path):
     h = svc.health()
     assert {"abandoned_fetch_workers", "abandoned_fetch_total"} <= set(h)
     assert h["abandoned_fetch_workers"] == 0
-    # No supervisor has run over this root yet: explicit None.
-    assert h["supervisor"] is None
+    # No supervisor has run over this root yet: an explicit "absent"
+    # status, distinguishable from a dead supervisor's stale document.
+    assert h["supervisor"] == {"status": "absent"}
     # A supervisor status document in the engine root is surfaced as-is.
     ckpt.write_json(tmp_path, "SUPERVISOR.json",
                     {"state": "done", "hang_takeovers": 1, "restarts": 2})

@@ -15,7 +15,10 @@ committed report, with warm strictly beating cold either way; lookup
 QPS is informational (wall noise). When the warm AND cold totals both
 match the committed point exactly (they are deterministic at a pinned
 slot count), the ratio check is trivially satisfied and any drift in
-either total is reported as a note.
+either total is reported as a note. For front reports
+(``BENCH_front.json``, tagged ``"bench": "front"``), bitwise HTTP
+answer parity and the diff endpoint's deterministic chunk-fill profile
+are absolute, and sustained batched QPS is gated within ``--tol``.
 
 Otherwise the report is a ``BENCH_stream_passes.json`` (the CI smoke
 run) compared against the committed one, matching points by ``n``:
@@ -85,6 +88,57 @@ def diff_serve(committed: dict, current: dict, tol: float) -> list:
     return problems
 
 
+def diff_front(committed: dict, current: dict, tol: float) -> list:
+    """Front-report violations: bitwise parity and the diff endpoint's
+    pass accounting are absolute; sustained batched QPS is wall-gated.
+
+    Parity covers every HTTP-answered row against the materialisation
+    of the generation that answered it, plus the cross-generation diff
+    against brute force. The diff's chunk-fill profile is
+    deterministic — first call against a baseline costs exactly one
+    grouped pass (``chunks`` fills on the baseline), repeats cost zero
+    on both cached generations — so any drift is a violation. QPS
+    crosses process + HTTP boundaries and is noisy, hence the generous
+    ``tol`` (same convention as the wall-gated stream configs)."""
+    problems = []
+    base = _points_by_n(committed)
+    new = _points_by_n(current)
+    shared = sorted(set(base) & set(new))
+    if not shared:
+        return [f"no shared n between committed {sorted(base)} and "
+                f"current {sorted(new)}"]
+    for n in shared:
+        ref, cur = base[n], new[n]
+        if not cur["parity"] or cur["stale_rows"] != 0:
+            problems.append(
+                f"n={n}: front answers no longer bitwise-equal to the "
+                f"answering generation's materialisation "
+                f"(stale_rows={cur['stale_rows']})")
+            continue
+        if not cur["diff"]["parity"]:
+            problems.append(f"n={n}: /diff no longer matches the "
+                            "brute-force cross-generation comparison")
+        chunks = cur["diff"]["chunks"]
+        for rep in cur["diff"]["passes"]:
+            calls = rep["calls"]
+            if calls[0]["old"] != chunks or \
+                    any(c != {"new": 0, "old": 0} for c in calls[1:]):
+                problems.append(
+                    f"n={n} replica {rep['replica']}: diff chunk-fill "
+                    f"profile drifted ({calls} vs one {chunks}-chunk "
+                    "grouped pass then zero)")
+        if any(r < 1 for r in cur["rebinds"]):
+            problems.append(f"n={n}: a replica's pointer watcher never "
+                            f"rebound (rebinds {cur['rebinds']})")
+        ref_qps = ref["sustained"]["batched_qps"]
+        cur_qps = cur["sustained"]["batched_qps"]
+        if cur_qps < ref_qps * (1.0 - tol):
+            problems.append(
+                f"n={n}: sustained batched lookup QPS {ref_qps} -> "
+                f"{cur_qps} (> {tol:.0%} regression)")
+    return problems
+
+
 def diff_screening(committed: dict, current: dict, tol: float) -> list:
     """Screening-report violations: oracle parity is absolute, the
     streamed-item reduction is the gated payoff.
@@ -135,7 +189,8 @@ def diff_screening(committed: dict, current: dict, tol: float) -> list:
 
 def diff(committed: dict, current: dict, tol: float) -> list:
     """Return a list of human-readable violations (empty = gate passes)."""
-    for kind, fn in (("serve", diff_serve), ("screening", diff_screening)):
+    for kind, fn in (("serve", diff_serve), ("screening", diff_screening),
+                     ("front", diff_front)):
         if committed.get("bench") == kind or current.get("bench") == kind:
             if committed.get("bench") != current.get("bench"):
                 return [f"report kind mismatch: committed "
