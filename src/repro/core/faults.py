@@ -48,10 +48,13 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from ..obs import MetricsRegistry
+
 __all__ = ["FaultPolicy", "FaultPlan", "ChunkFetchError",
            "ChunkFetchTimeout", "ChunkIntegrityError", "FetchCapacityError",
            "fetch_with_retries", "resilient_source", "faulty_source",
-           "policy_from_cfg", "abandoned_workers", "ABANDONED_WORKER_CAP"]
+           "policy_from_cfg", "abandoned_workers", "ABANDONED_WORKER_CAP",
+           "process_registry"]
 
 # Exceptions a retry may recover from. Anything else (a programming
 # error, an injected kill) propagates immediately: retrying it would
@@ -181,6 +184,33 @@ _abandoned_lock = threading.Lock()
 _abandoned: list = []      # threads abandoned by a timeout, maybe live
 _abandoned_total = 0       # monotone count of every abandonment
 
+# Process-wide fault metrics (DESIGN.md §14). Always a real registry —
+# these counters are the source of truth the serving layers' health
+# fields read through, so there is no null path here; the instruments
+# are plain locked integers, cheap on failure paths by definition.
+_REGISTRY = MetricsRegistry()
+_RETRIES = _REGISTRY.counter("faults_retries_total")
+_ABANDONED_CTR = _REGISTRY.counter("faults_abandoned_total")
+
+
+def _abandoned_live() -> int:
+    with _abandoned_lock:
+        _reap_abandoned_locked()
+        return len(_abandoned)
+
+
+_REGISTRY.gauge("faults_abandoned_live", fn=_abandoned_live)
+
+
+def process_registry() -> MetricsRegistry:
+    """The process-wide fault-domain metrics registry.
+
+    Exported by every ``/metrics`` endpoint alongside the per-service
+    registries, so retry pressure and leaked fetch workers are visible
+    without a :class:`~repro.serve.decisions.DecisionService` in play.
+    """
+    return _REGISTRY
+
 
 def _reap_abandoned_locked() -> None:
     _abandoned[:] = [t for t in _abandoned if t.is_alive()]
@@ -238,6 +268,7 @@ def _call_with_timeout(fn: Callable, i: int, timeout: float):
         with _abandoned_lock:
             _abandoned.append(t)
             _abandoned_total += 1
+        _ABANDONED_CTR.inc()
         raise ChunkFetchTimeout(
             f"chunk {i}: fetch exceeded the {timeout:g}s per-fetch "
             "timeout (the worker thread was abandoned)")
@@ -288,6 +319,7 @@ def fetch_with_retries(fn: Callable, i: int, policy: FaultPolicy,
             history.append((attempt, repr(e), delay))
             if last:
                 raise ChunkFetchError(i, history) from e
+            _RETRIES.inc()
             if on_retry is not None:
                 on_retry(i, attempt, e, delay)
             sleep(delay)

@@ -74,6 +74,7 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import time
 from typing import Callable, NamedTuple, Optional
 
 import numpy as np
@@ -84,6 +85,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..checkpoint import ckpt
 from ..compat import shard_map
+from ..obs import NULL_TRACER
 from .bucketing import make_edges, threshold_from_hist
 from .faults import policy_from_cfg, resilient_source
 from .chunked import (
@@ -268,14 +270,30 @@ def sharded_source(source: HostChunkSource, slots: int):
 # The double-buffered epoch driver.
 # --------------------------------------------------------------------------
 
-def _put_chunk(source, i, dtype):
+def _put_chunk(source, i, dtype, acc=None):
+    # ``acc`` is the per-epoch ingest accumulator ([fetch_s, h2d_s,
+    # chunks]): timings are bare perf_counter pairs on the host and are
+    # emitted as ONE ingest.fetch + ONE ingest.h2d record per epoch —
+    # per-chunk span objects on the streaming critical path would
+    # dominate the cost they measure. Nothing here reads a clock inside
+    # traced code, so the produced bytes are identical either way.
+    if acc is not None:
+        t0 = time.perf_counter()
+        p, b = source.fn(i)
+        t1 = time.perf_counter()
+        out = (jax.device_put(np.asarray(p, dtype)),
+               jax.device_put(np.asarray(b, dtype)))
+        acc[0] += t1 - t0
+        acc[1] += time.perf_counter() - t1
+        acc[2] += 1
+        return out
     p, b = source.fn(i)
     return (jax.device_put(np.asarray(p, dtype)),
             jax.device_put(np.asarray(b, dtype)))
 
 
 def _epoch(source, step, state, extra, dtype, double_buffer,
-           start=0, on_step=None, indices=None):
+           start=0, on_step=None, indices=None, tracer=NULL_TRACER):
     """One pass over chunks [start, c): ``state = step(state, p, b, *extra)``.
 
     Double-buffered mode dispatches the step (async) and only then
@@ -292,26 +310,37 @@ def _epoch(source, step, state, extra, dtype, double_buffer,
     """
     c = _num_chunks(source.n, source.chunk)
     idxs = list(range(start, c)) if indices is None else list(indices)
+    acc = [0.0, 0.0, 0] if tracer.enabled else None
+    t_epoch = time.time() if tracer.enabled else 0.0
     if not double_buffer:
         for i in idxs:
-            cur = _put_chunk(source, i, dtype)
+            cur = _put_chunk(source, i, dtype, acc)
             jax.block_until_ready(cur)
             state = step(state, *cur, *extra)
             jax.block_until_ready(state)
             if on_step is not None:
                 on_step(i, state)
+        _emit_ingest(tracer, t_epoch, acc)
         return state
     if not idxs:
         return state
-    nxt = _put_chunk(source, idxs[0], dtype)
+    nxt = _put_chunk(source, idxs[0], dtype, acc)
     for t, i in enumerate(idxs):
         cur, nxt = nxt, None
         state = step(state, *cur, *extra)
         if t + 1 < len(idxs):
-            nxt = _put_chunk(source, idxs[t + 1], dtype)
+            nxt = _put_chunk(source, idxs[t + 1], dtype, acc)
         if on_step is not None:
             on_step(i, state)
+    _emit_ingest(tracer, t_epoch, acc)
     return state
+
+
+def _emit_ingest(tracer, t_epoch, acc):
+    """One ingest.fetch + one ingest.h2d record for a finished epoch."""
+    if acc is not None and acc[2]:
+        tracer.record("ingest.fetch", t_epoch, acc[0], chunks=acc[2])
+        tracer.record("ingest.h2d", t_epoch, acc[1], chunks=acc[2])
 
 
 def _observing_source(source, scr, base=0):
@@ -816,12 +845,13 @@ class _SingleRuntime:
         self.real_c = self.fin_cols
         self.slots = 1
         self.scr = None   # HostScreen, installed by the driver
+        self.tracer = NULL_TRACER   # phase-span tracer, installed likewise
 
     def iter_epoch(self, lam, dprev):
         st, cfg, src = self.st, self.cfg, self.source
         if cfg.algo == "dd":
             r = _epoch(src, st["dd_step"], jnp.zeros_like(lam), (lam,),
-                       self.dtype, self.double_buffer)
+                       self.dtype, self.double_buffer, tracer=self.tracer)
             return st["dd_tail"](r, lam, dprev, self.budgets)
         edges = make_edges(lam, cfg.bucket_delta, cfg.bucket_growth,
                            cfg.bucket_half)
@@ -830,7 +860,8 @@ class _SingleRuntime:
         hist0 = jnp.zeros((src.k, edges.shape[-1] + 1), jnp.float32)
         top0 = jnp.full((src.k,), -jnp.inf, lam.dtype)
         hist, top = _epoch(src, st["scd_step"], (hist0, top0),
-                           (lam, edges), self.dtype, self.double_buffer)
+                           (lam, edges), self.dtype, self.double_buffer,
+                           tracer=self.tracer)
         return st["scd_tail"](hist, top, lam, dprev, self.budgets, edges)
 
     def _iter_epoch_screened(self, lam, dprev, edges):
@@ -847,12 +878,16 @@ class _SingleRuntime:
             top0 = jnp.full((src.k,), -jnp.inf, lam.dtype)
             hist, top = _epoch(over, st["scd_step"], (hist0, top0),
                                (lam, edges), self.dtype,
-                               self.double_buffer, indices=indices)
+                               self.double_buffer, indices=indices,
+                               tracer=self.tracer)
             return st["scd_tail_scr"](hist, top, lam, dprev, self.budgets,
                                       edges)
 
         lam_n, d_n, moved, trusted = run(obs, indices=idx)
         scr.record_streamed(len(idx))
+        if self.tracer.enabled:
+            self.tracer.event("screen.skip", streamed=len(idx),
+                              skipped=self.real_c - len(idx))
         if scr.any_retired() and not bool(trusted):
             lam_n, d_n, moved, _ = run(src)
             scr.record_streamed(self.real_c, fallback=True)
@@ -862,7 +897,7 @@ class _SingleRuntime:
     def metrics_record(self, lam):
         out = _epoch(self.source, self.st["metrics_step"],
                      _metrics_init(self.source.k, lam.dtype), (lam,),
-                     self.dtype, self.double_buffer)
+                     self.dtype, self.double_buffer, tracer=self.tracer)
         return self.st["metrics_tail"](out[0], out[1], out[2], lam,
                                        self.budgets)
 
@@ -877,7 +912,7 @@ class _SingleRuntime:
     def fin_run(self, carry, lam, start, on_col):
         return _epoch(self.source, self.st["fused_step"], carry, (lam,),
                       self.dtype, self.double_buffer, start=start,
-                      on_step=on_col)
+                      on_step=on_col, tracer=self.tracer)
 
     def fin_result(self, out, lam, iters):
         r, primal, dual_sum = out[0], out[1], out[2]
@@ -928,36 +963,50 @@ class _ShardedRuntime:
         self.cps = -(-c // slots)
         self.fin_cols = self.cps
         self.scr = None   # HostScreen over slots*cps padded chunk slots
+        self.tracer = NULL_TRACER   # phase-span tracer, driver-installed
         spd = slots // mesh.devices.size
         self.st = _jit_steps_sharded(cfg, q, mesh, spd)
         self.slot_sh = NamedSharding(mesh, P(tuple(mesh.axis_names)))
         self.budgets = jnp.asarray(source.budgets, cfg.dtype)
         self.keep = jax.device_put(self.st["keep_np"], self.slot_sh)
 
+    def _fetch_cols(self, j, screen, dt):
+        if not screen:
+            ps, bs = zip(*(sub.fn(j) for sub in self.subs))
+            return ps, bs
+        # Screened column: fetch only slots whose chunk (global slot
+        # index s*cps + j) is still active; retired slots are fed
+        # zeros — bitwise-neutral by the inert-row contract (their
+        # scatter-adds contribute +0.0 and their candidate values
+        # sit below ``max(top, edges[:, -1])``, screening.py §4).
+        scr, cps = self.scr, self.cps
+        zero = np.zeros((self.source.chunk, self.source.k), dt)
+        ps, bs = [], []
+        for s, sub in enumerate(self.subs):
+            g = s * cps + j
+            if scr.active[g]:
+                p, b = sub.fn(j)
+                scr.note_bound(g, p, b)
+            else:
+                p = b = zero
+            ps.append(p)
+            bs.append(b)
+        return ps, bs
+
     def _produce(self, j, screen=False):
         # Same cfg.dtype cast as the single-device _put_chunk, so a
         # source producing wider arrays feeds both runtimes identically.
         dt = np.dtype(self.cfg.dtype)
-        if not screen:
-            ps, bs = zip(*(sub.fn(j) for sub in self.subs))
-        else:
-            # Screened column: fetch only slots whose chunk (global slot
-            # index s*cps + j) is still active; retired slots are fed
-            # zeros — bitwise-neutral by the inert-row contract (their
-            # scatter-adds contribute +0.0 and their candidate values
-            # sit below ``max(top, edges[:, -1])``, screening.py §4).
-            scr, cps = self.scr, self.cps
-            zero = np.zeros((self.source.chunk, self.source.k), dt)
-            ps, bs = [], []
-            for s, sub in enumerate(self.subs):
-                g = s * cps + j
-                if scr.active[g]:
-                    p, b = sub.fn(j)
-                    scr.note_bound(g, p, b)
-                else:
-                    p = b = zero
-                ps.append(p)
-                bs.append(b)
+        tracer = self.tracer
+        if tracer.enabled:
+            with tracer.span("ingest.fetch", col=int(j)):
+                ps, bs = self._fetch_cols(j, screen, dt)
+            with tracer.span("ingest.h2d", col=int(j)):
+                pb = np.ascontiguousarray(np.stack(ps), dtype=dt)
+                bb = np.ascontiguousarray(np.stack(bs), dtype=dt)
+                return (jax.device_put(pb, self.slot_sh),
+                        jax.device_put(bb, self.slot_sh))
+        ps, bs = self._fetch_cols(j, screen, dt)
         pb = np.ascontiguousarray(np.stack(ps), dtype=dt)
         bb = np.ascontiguousarray(np.stack(bs), dtype=dt)
         return (jax.device_put(pb, self.slot_sh),
@@ -1045,6 +1094,9 @@ class _ShardedRuntime:
 
         lam_n, d_n, moved, trusted = run(indices=cols, screen=True)
         scr.record_streamed(streamed)
+        if self.tracer.enabled:
+            self.tracer.event("screen.skip", streamed=streamed,
+                              skipped=self.real_c - streamed)
         if scr.any_retired() and not bool(trusted):
             lam_n, d_n, moved, _ = run()
             scr.record_streamed(self.real_c, fallback=True)
@@ -1093,7 +1145,8 @@ def solve_streaming_host(source: HostChunkSource,
                          lam0=None, double_buffer: bool = True, mesh=None,
                          slots: Optional[int] = None, checkpoint_dir=None,
                          resume_from=None,
-                         screen_init: Optional[dict] = None) -> StreamResult:
+                         screen_init: Optional[dict] = None,
+                         tracer=None) -> StreamResult:
     """Solve a host-fed sparse GKP, chunks uploaded as they are consumed.
 
     The host-side twin of ``chunked.solve_streaming``: the iteration
@@ -1136,6 +1189,15 @@ def solve_streaming_host(source: HostChunkSource,
     ``record_history`` needs ``cfg.metrics_every`` sampling (one extra
     metrics epoch per sample, bitwise the traced sampled history) and
     cannot be combined with checkpoint/resume.
+
+    Observability: ``tracer`` (a :class:`repro.obs.Tracer`; default the
+    shared no-op) emits host-side phase spans — ``solve.iterate``,
+    ``solve.finalize``, ``ingest.fetch``, ``ingest.h2d``, ``screen.skip``
+    — to its JSONL journal. Tracing is *not* a ``SolverConfig`` field:
+    it never enters the resume fingerprint, and because spans bracket
+    only host Python (never a value inside a jitted program), a traced
+    solve is bitwise identical to an untraced one (``tests/test_obs.py``
+    and ``benchmarks/bench_obs.py`` gate this).
     """
     _validate_stream_cfg(cfg)
     if cfg.algo == "scd" and cfg.cd_mode != "sync":
@@ -1213,8 +1275,10 @@ def solve_streaming_host(source: HostChunkSource,
             f"{resume_from!r} was written for a different "
             "(source, cfg, q, lam0) — refusing to resume")
 
+    tracer = NULL_TRACER if tracer is None else tracer
     rt = (_ShardedRuntime(source, cfg, q, mesh, S, double_buffer) if sharded
           else _SingleRuntime(source, cfg, q, double_buffer))
+    rt.tracer = tracer
     dprev = jnp.zeros_like(lam)
     iters, phase, cursor, fin_carry = 0, _PHASE_ITER, 0, None
     if restored is not None:
@@ -1247,7 +1311,11 @@ def solve_streaming_host(source: HostChunkSource,
 
     if phase == _PHASE_ITER:
         while iters < cfg.max_iters:
-            lam, dprev, moved = rt.iter_epoch(lam, dprev)
+            if tracer.enabled:
+                with tracer.span("solve.iterate", iter=iters):
+                    lam, dprev, moved = rt.iter_epoch(lam, dprev)
+            else:
+                lam, dprev, moved = rt.iter_epoch(lam, dprev)
             iters += 1
             if rows is not None:
                 if (iters - 1) % every == 0:
@@ -1283,8 +1351,12 @@ def solve_streaming_host(source: HostChunkSource,
 
     scr_stats = scr.stats() if scr is not None else None
     if cfg.stream_finalize == "legacy":
-        return rt.legacy_result(lam, iters)._replace(history=history,
-                                                     screen=scr_stats)
+        if tracer.enabled:
+            with tracer.span("solve.finalize", mode="legacy", iters=iters):
+                res = rt.legacy_result(lam, iters)
+        else:
+            res = rt.legacy_result(lam, iters)
+        return res._replace(history=history, screen=scr_stats)
 
     on_col = None
     if checkpointing:
@@ -1296,7 +1368,12 @@ def solve_streaming_host(source: HostChunkSource,
                             rt.fin_to_np(state), keep=cfg.checkpoint_keep)
 
     carry = rt.fin_init() if fin_carry is None else fin_carry
-    carry = rt.fin_run(carry, lam, cursor, on_col)
-    return rt.fin_result(carry, lam, iters)._replace(history=history,
-                                                     screen=scr_stats)
+    if tracer.enabled:
+        with tracer.span("solve.finalize", mode="fused", iters=iters):
+            carry = rt.fin_run(carry, lam, cursor, on_col)
+            res = rt.fin_result(carry, lam, iters)
+    else:
+        carry = rt.fin_run(carry, lam, cursor, on_col)
+        res = rt.fin_result(carry, lam, iters)
+    return res._replace(history=history, screen=scr_stats)
 

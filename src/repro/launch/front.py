@@ -67,8 +67,15 @@ _FRONT_DIR = "front"
 def run_replica(root, index: int, cache_chunks: int, retries: int,
                 attach_timeout: float, poll_s: float,
                 poison_scale: Optional[float] = None,
-                poison_chunk: int = 0) -> None:
-    """The ``--replica`` body: attach, announce, serve until shutdown."""
+                poison_chunk: int = 0, obs: bool = False) -> None:
+    """The ``--replica`` body: attach, announce, serve until shutdown.
+
+    With ``obs=True`` the replica traces to
+    ``<root>/obs/replica<i>-<pid>.jsonl`` (serve.fill spans carrying
+    front-minted request ids, replica.rebind spans); metrics are always
+    on — the ``metrics`` RPC op and the front's ``/metrics`` read them.
+    """
+    from repro.obs import make_obs
     from repro.serve import synthetic_source
 
     make_source = synthetic_source
@@ -77,8 +84,10 @@ def run_replica(root, index: int, cache_chunks: int, retries: int,
                                        poison_chunk)
     cfg = SolverConfig(reduce="bucketed", fetch_retries=retries,
                        fetch_backoff=1e-4, fetch_backoff_cap=1e-3)
+    obs_bundle = make_obs(root=root if obs else None,
+                          role=f"replica{index}")
     engine = RefreshEngine.attach(root, timeout=attach_timeout, cfg=cfg,
-                                  make_source=make_source)
+                                  make_source=make_source, obs=obs_bundle)
     rep = ReplicaServer(engine, index=index, cache_chunks=cache_chunks,
                         poll_s=poll_s)
     port = rep.start()
@@ -173,6 +182,14 @@ class _HTTPClient:
         self.conn.request("GET", path)
         r = self.conn.getresponse()
         body = json.loads(r.read().decode("utf-8"))
+        if r.status != 200:
+            raise RuntimeError(f"GET {path} -> {r.status}: {body}")
+        return body
+
+    def get_text(self, path: str) -> str:
+        self.conn.request("GET", path)
+        r = self.conn.getresponse()
+        body = r.read().decode("utf-8")
         if r.status != 200:
             raise RuntimeError(f"GET {path} -> {r.status}: {body}")
         return body
@@ -339,6 +356,17 @@ def run_front_scenario(spec: WorkloadSpec, generations: int, root,
 
     health = cli.get("/health")
     rebinds = [d["replica"]["rebinds"] for d in health["replicas"]]
+
+    # The /metrics scrape: Prometheus text must agree with /health —
+    # the front counter with the front stats dict, the unlabeled
+    # aggregate with the sum of the replica="i" labeled series, and the
+    # labeled serve_queries with each replica's own health document.
+    # (Traffic is quiesced by now, so the two reads see the same state.)
+    metrics = _check_metrics(cli.get_text("/metrics"), health, replicas)
+    print(f"[front] /metrics: {metrics['series']} series; consistency "
+          f"{'OK' if metrics['consistent'] else 'FAIL'}"
+          + ("" if metrics["consistent"]
+             else f" ({metrics['failures']})"))
     cli.close()
     health_cli.close()
     front.shutdown()
@@ -359,7 +387,45 @@ def run_front_scenario(spec: WorkloadSpec, generations: int, root,
                  "changed": int(brute.sum()), "chunks": chunks,
                  "parity": diff_parity, "passes": passes},
         "front_stats": health["front"],
+        "metrics": metrics,
     }
+
+
+def _check_metrics(text: str, health: dict, replicas: int) -> dict:
+    """Cross-check a /metrics scrape against the /health document."""
+    from repro.obs import parse_prometheus
+
+    series = parse_prometheus(text)
+
+    def val(name, **labels):
+        return series.get((name, tuple(sorted(labels.items()))), 0.0)
+
+    failures = []
+    if val("front_requests") != health["front"]["requests"]:
+        failures.append(
+            f"front_requests {val('front_requests')} != "
+            f"health requests {health['front']['requests']}")
+    for name in ("serve_queries", "serve_fills", "serve_stale_serves",
+                 "replica_rebinds"):
+        per = sum(val(name, replica=str(i)) for i in range(replicas))
+        if val(name) != per:
+            failures.append(f"{name} aggregate {val(name)} != "
+                            f"labeled sum {per}")
+    for i, doc in enumerate(health["replicas"]):
+        if "error" in doc:
+            continue
+        if val("serve_queries", replica=str(i)) != doc["queries"]:
+            failures.append(
+                f"replica {i} serve_queries "
+                f"{val('serve_queries', replica=str(i))} != "
+                f"health queries {doc['queries']}")
+        if val("replica_rebinds", replica=str(i)) \
+                != doc["replica"]["rebinds"]:
+            failures.append(
+                f"replica {i} replica_rebinds != health rebinds "
+                f"{doc['replica']['rebinds']}")
+    return {"series": len(series), "consistent": not failures,
+            "failures": failures}
 
 
 def main() -> None:
@@ -390,6 +456,8 @@ def main() -> None:
                     help="test/chaos: fail one chunk of the generation "
                          "at this budget_scale (degraded-path drills)")
     ap.add_argument("--poison-chunk", type=int, default=0)
+    ap.add_argument("--obs", action="store_true",
+                    help="replica mode: trace spans to <root>/obs/")
     args = ap.parse_args()
 
     if args.replica:
@@ -398,7 +466,7 @@ def main() -> None:
         run_replica(args.root, args.index, args.cache_chunks,
                     args.retries, args.attach_timeout, args.poll,
                     poison_scale=args.poison_scale,
-                    poison_chunk=args.poison_chunk)
+                    poison_chunk=args.poison_chunk, obs=args.obs)
         return
 
     if args.smoke:
@@ -415,7 +483,8 @@ def main() -> None:
                              client_threads=args.client_threads,
                              batch=args.batch)
     ok = out["parity"] and out["diff"]["parity"] \
-        and all(r >= 1 for r in out["rebinds"])
+        and all(r >= 1 for r in out["rebinds"]) \
+        and out["metrics"]["consistent"]
     print(f"[front] {'OK' if ok else 'FAIL'}: "
           f"{out['sustained']['batched_qps']:,.0f} lookups/s sustained, "
           f"rebinds {out['rebinds']}")

@@ -65,6 +65,7 @@ import time
 from typing import Callable, Optional
 
 from . import env as envmod
+from ..obs import MetricsRegistry
 
 __all__ = ["SupervisorConfig", "ChaosSchedule", "Supervisor",
            "run_solve_task", "run_refresh_task", "run_chaos_soak"]
@@ -173,7 +174,43 @@ class Supervisor:
         self.worker_cmd = worker_cmd
         self.env_extra = dict(env_extra or {})
         self.hb_path = self.root / _HEARTBEAT
-        self.counters: dict = {}
+        # Supervision counters live on a typed registry (monotone
+        # counters for event tallies, gauges for the point-in-time
+        # term/devices/lease-age readings); the :attr:`counters` dict
+        # the rest of the stack consumes is assembled on read, with the
+        # same 13 keys SUPERVISOR.json has always published.
+        self.registry = MetricsRegistry()
+        self._ctrs = {
+            k: self.registry.counter(f"supervisor_{k}")
+            for k in ("spawns", "crash_restarts", "hang_takeovers",
+                      "kills_injected", "stops_injected",
+                      "degraded_spawns")}
+        self._g_ok = self.registry.gauge("supervisor_ok")
+        self._g_term = self.registry.gauge("supervisor_term")
+        self._g_devices = self.registry.gauge("supervisor_devices")
+        self._g_devices.set(self.devices0)
+        self._g_lease_age = self.registry.gauge("supervisor_max_lease_age")
+        self._info = {"state": "init", "last_rc": None}
+
+    @property
+    def counters(self) -> dict:
+        """The status-document dict, assembled from the registry."""
+        c = {k: int(v.value) for k, v in self._ctrs.items()}
+        return {
+            "ok": bool(self._g_ok.value),
+            "state": self._info["state"],
+            "spawns": c["spawns"],
+            "crash_restarts": c["crash_restarts"],
+            "hang_takeovers": c["hang_takeovers"],
+            "restarts": c["crash_restarts"] + c["hang_takeovers"],
+            "kills_injected": c["kills_injected"],
+            "stops_injected": c["stops_injected"],
+            "degraded_spawns": c["degraded_spawns"],
+            "max_lease_age": round(float(self._g_lease_age.value), 3),
+            "term": int(self._g_term.value),
+            "devices": int(self._g_devices.value),
+            "last_rc": self._info["last_rc"],
+        }
 
     # -- spawn plumbing -----------------------------------------------------
 
@@ -227,10 +264,8 @@ class Supervisor:
     def _publish(self, state: str):
         from ..checkpoint import ckpt
 
-        self.counters["state"] = state
-        self.counters["restarts"] = (self.counters["crash_restarts"]
-                                     + self.counters["hang_takeovers"])
-        doc = dict(self.counters)
+        self._info["state"] = state
+        doc = self.counters
         doc["updated_wall"] = time.time()
         ckpt.write_json(self.root, _STATUS, doc)
 
@@ -250,13 +285,11 @@ class Supervisor:
         mon = LeaseMonitor(self.hb_path, ttl=self.cfg.ttl,
                            grace=self.cfg.grace, expect_term=term,
                            progress_ttl=self.cfg.progress_ttl)
-        c = self.counters
         while True:
             rc = proc.poll()
             st = mon.poll()
             if st["age"] is not None:
-                c["max_lease_age"] = round(
-                    max(c["max_lease_age"], st["age"]), 3)
+                self._g_lease_age.set_max(float(st["age"]))
             if rc is not None:
                 return ("done", rc) if rc == 0 else ("crash", rc)
             if st["expired"]:
@@ -273,10 +306,10 @@ class Supervisor:
                 try:
                     if kind == "kill":
                         os.kill(proc.pid, signal.SIGKILL)
-                        c["kills_injected"] += 1
+                        self._ctrs["kills_injected"].inc()
                     else:
                         os.kill(proc.pid, signal.SIGSTOP)
-                        c["stops_injected"] += 1
+                        self._ctrs["stops_injected"].inc()
                 except ProcessLookupError:
                     pass
             time.sleep(self.cfg.poll)
@@ -294,12 +327,10 @@ class Supervisor:
         from ..core.heartbeat import claim_takeover
 
         ckpt.write_json(self.root, _TASK, self.task)
-        self.counters = dict(
-            ok=False, state="starting", spawns=0, crash_restarts=0,
-            hang_takeovers=0, restarts=0, kills_injected=0,
-            stops_injected=0, degraded_spawns=0, max_lease_age=0.0,
-            term=0, devices=self.devices0, last_rc=None)
-        c = self.counters
+        self._info.update(state="starting", last_rc=None)
+        self._g_ok.set(0)
+        self._g_term.set(0)
+        self._g_devices.set(self.devices0)
         events = list(self.chaos.events) if self.chaos is not None else []
         devices = self.devices0
         term = self._next_term()
@@ -310,22 +341,24 @@ class Supervisor:
                     "was already held — another coordinator owns this "
                     "root; standing down instead of double-driving it")
             proc = self._spawn(term, devices)
-            c["spawns"] += 1
-            c["term"], c["devices"] = term, devices
+            self._ctrs["spawns"].inc()
+            self._g_term.set(term)
+            self._g_devices.set(devices)
             if devices < self.devices0:
-                c["degraded_spawns"] += 1
+                self._ctrs["degraded_spawns"].inc()
             self._publish("running")
             outcome, rc = self._watch(proc, term, events)
             if outcome == "done":
-                c["ok"] = True
+                self._g_ok.set(1)
                 self._publish("done")
-                return dict(c)
+                return self.counters
             if outcome == "crash":
-                c["crash_restarts"] += 1
-                c["last_rc"] = rc
+                self._ctrs["crash_restarts"].inc()
+                self._info["last_rc"] = rc
             else:
-                c["hang_takeovers"] += 1
-            if c["crash_restarts"] + c["hang_takeovers"] \
+                self._ctrs["hang_takeovers"].inc()
+            if (self._ctrs["crash_restarts"].value
+                    + self._ctrs["hang_takeovers"].value) \
                     > self.cfg.max_restarts:
                 # Containment, not a spin: budget exhausted. The stamp is
                 # root-level (the per-generation FAILED.json remains the
@@ -335,11 +368,11 @@ class Supervisor:
                 ckpt.write_json(self.root, _FAILED, {
                     "reason": "crash-loop budget exhausted",
                     "max_restarts": self.cfg.max_restarts,
-                    "counters": dict(c),
+                    "counters": self.counters,
                     "task_kind": self.task.get("kind"),
                 })
                 self._publish("failed")
-                return dict(c)
+                return self.counters
             term += 1
             if self.cfg.degrade:
                 devices = max(self.cfg.min_devices, devices // 2)

@@ -55,6 +55,7 @@ from __future__ import annotations
 
 import functools
 import threading
+import time
 from collections import OrderedDict
 from typing import Iterable, NamedTuple, Optional
 
@@ -67,6 +68,7 @@ from ..core.chunked import decisions_rows
 from ..core.faults import (ChunkFetchError, abandoned_workers,
                            fetch_with_retries)
 from ..core.prefetch import HostChunkSource
+from ..obs import MetricsRegistry, NULL_TRACER
 
 __all__ = ["DecisionService", "LookupResult"]
 
@@ -128,9 +130,13 @@ class DecisionService:
     fallback with ``stale=True`` instead of raising.
     """
 
+    _STAT_KEYS = ("queries", "hits", "fills", "evictions",
+                  "retries", "fetch_failures", "stale_serves")
+
     def __init__(self, source, generation, cache_chunks: int = 16,
                  fault_policy=None, verify: bool = False,
-                 fallback: Optional[tuple] = None, supervisor_root=None):
+                 fallback: Optional[tuple] = None, supervisor_root=None,
+                 registry=None, tracer=None):
         if cache_chunks < 1:
             raise ValueError(f"cache_chunks must be >= 1, "
                              f"got {cache_chunks}")
@@ -146,14 +152,36 @@ class DecisionService:
         # harmless (they can only answer for their own generation) and
         # the fallback path still hits them.
         self._cache: OrderedDict = OrderedDict()
-        self.stats = {"queries": 0, "hits": 0, "fills": 0, "evictions": 0,
-                      "retries": 0, "fetch_failures": 0, "stale_serves": 0}
+        # Per-service metrics registry (DESIGN.md §14): the serving
+        # counters live here and ``stats`` / ``health()`` are read-only
+        # views over it, preserving every pre-registry field name. The
+        # registry is per *service* (not process-wide) on purpose — the
+        # replica ``diff`` op baselines per-generation services against
+        # each other by their own fill counts.
+        self.registry = MetricsRegistry() if registry is None else registry
+        self._counters = {k: self.registry.counter(f"serve_{k}")
+                          for k in self._STAT_KEYS}
+        self.registry.gauge("serve_cached_chunks",
+                            fn=lambda: len(self._cache))
+        self.registry.gauge("serve_cache_chunks").set(cache_chunks)
+        self._g_degraded = self.registry.gauge("serve_degraded")
+        self._h_fill = self.registry.histogram("serve_fill_seconds")
+        self._tracer = NULL_TRACER if tracer is None else tracer
+        # Degraded reflects the *current* binding state, not history: a
+        # stale serve raises it, a rebind onto a fresh generation
+        # clears it (the recovery-transition test pins this).
+        self._degraded = False
         # The service lock: held around cache/stats mutation and the
         # binding swap — never around a fetch or the jitted fill.
         self._lock = threading.Lock()
         self._current = self._bind(source, generation)
         self._fallback = (self._bind(*fallback)
                           if fallback is not None else None)
+
+    @property
+    def stats(self) -> dict:
+        """The serving counters as a plain dict (pre-registry shape)."""
+        return {k: c.value for k, c in self._counters.items()}
 
     @staticmethod
     def _bind(source, generation) -> _Bound:
@@ -227,12 +255,17 @@ class DecisionService:
             old = self._current
             self._current = new
             self._fallback = old
+            # A fresh binding starts healthy: ``degraded`` states "the
+            # *current* binding has served stale", not "some binding
+            # ever did" (the recovery-transition regression pins this).
+            # ``stale_serves`` stays monotone across rebinds.
+            self._degraded = False
+        self._g_degraded.set(0)
 
     # -- the chunk pipeline ------------------------------------------------
 
     def _on_retry(self, chunk, attempt, err, delay):
-        with self._lock:
-            self.stats["retries"] += 1
+        self._counters["retries"].inc()
 
     def _fetch(self, bound: _Bound, ci: int):
         if isinstance(bound.source, HostChunkSource):
@@ -261,19 +294,34 @@ class DecisionService:
         with self._lock:
             hit = self._cache.get(key)
             if hit is not None:
-                self.stats["hits"] += 1
+                self._counters["hits"].inc()
                 self._cache.move_to_end(key)
                 return hit
-        p, b = self._fetch(bound, ci)
-        rows = ci * bound.source.chunk + np.arange(bound.source.chunk)
-        valid = jnp.asarray(rows < bound.source.n)
-        x = np.asarray(bound.fn(p, b, bound.lam, valid, bound.tau))
+        t0 = time.perf_counter()
+        tracer = self._tracer
+        if tracer.enabled:
+            # The fill span carries the request id installed by the
+            # replica RPC layer (repro.obs.trace.request), correlating a
+            # front HTTP request with the fill that served it.
+            with tracer.span("serve.fill", chunk=int(ci),
+                             gen=bound.generation.gen):
+                p, b = self._fetch(bound, ci)
+                rows = (ci * bound.source.chunk
+                        + np.arange(bound.source.chunk))
+                valid = jnp.asarray(rows < bound.source.n)
+                x = np.asarray(bound.fn(p, b, bound.lam, valid, bound.tau))
+        else:
+            p, b = self._fetch(bound, ci)
+            rows = ci * bound.source.chunk + np.arange(bound.source.chunk)
+            valid = jnp.asarray(rows < bound.source.n)
+            x = np.asarray(bound.fn(p, b, bound.lam, valid, bound.tau))
+        self._h_fill.observe(time.perf_counter() - t0)
         with self._lock:
-            self.stats["fills"] += 1
+            self._counters["fills"].inc()
             self._cache[key] = x
             while len(self._cache) > self.cache_chunks:
                 self._cache.popitem(last=False)
-                self.stats["evictions"] += 1
+                self._counters["evictions"].inc()
         return x
 
     # -- lookups -----------------------------------------------------------
@@ -285,20 +333,20 @@ class DecisionService:
         user = int(user)
         if not 0 <= user < n:
             raise IndexError(f"user {user} outside [0, {n})")
-        with self._lock:
-            self.stats["queries"] += 1
+        self._counters["queries"].inc()
         try:
             row = self._chunk_decisions(cur, user // chunk)[user % chunk]
             return LookupResult(row, False, cur.generation.gen)
         except ChunkFetchError:
-            with self._lock:
-                self.stats["fetch_failures"] += 1
+            self._counters["fetch_failures"].inc()
             if fb is None or user >= fb.source.n:
                 raise
             row = self._chunk_decisions(
                 fb, user // fb.source.chunk)[user % fb.source.chunk]
+            self._counters["stale_serves"].inc()
             with self._lock:
-                self.stats["stale_serves"] += 1
+                self._degraded = True
+            self._g_degraded.set(1)
             return LookupResult(row, True, fb.generation.gen)
 
     def lookup(self, user: int) -> LookupResult:
@@ -369,7 +417,12 @@ class DecisionService:
         source is failing past its retry budget and queries are being
         answered by the fallback generation — degraded but alive;
         ``fetch_failures`` without matching ``stale_serves`` means
-        queries are *failing* (no fallback covered them).
+        queries are *failing* (no fallback covered them). ``degraded``
+        is the *current* binding's state — True once this binding has
+        served stale, reset when :meth:`rebind` installs a fresh
+        generation — so a service that rebinds onto a healed source
+        reports healthy again even though ``stale_serves`` (a monotone
+        counter) stays nonzero.
         ``abandoned_fetch_workers`` / ``abandoned_fetch_total`` surface
         the process-wide leaked-worker counters of the timeout layer
         (:func:`repro.core.faults.abandoned_workers`) — a backend that
@@ -387,16 +440,16 @@ class DecisionService:
         leaked = abandoned_workers()
         with self._lock:
             cur, fb = self._current, self._fallback
-            stats = dict(self.stats)
             cached = len(self._cache)
+            degraded = self._degraded
         out = {
-            **stats,
+            **self.stats,
             "generation": cur.generation.gen,
             "fallback_generation": (None if fb is None
                                     else fb.generation.gen),
             "cached_chunks": cached,
             "cache_chunks": self.cache_chunks,
-            "degraded": stats["stale_serves"] > 0,
+            "degraded": degraded,
             "abandoned_fetch_workers": leaked["live"],
             "abandoned_fetch_total": leaked["total"],
         }

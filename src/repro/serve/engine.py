@@ -60,6 +60,7 @@ import jax.numpy as jnp
 
 from ..checkpoint import ckpt
 from ..core.faults import ChunkFetchError, policy_from_cfg
+from ..obs import null_obs
 from ..core.prefetch import (
     HostChunkSource,
     chunk_hashes,
@@ -245,13 +246,20 @@ class RefreshEngine:
                                        HostChunkSource] = synthetic_source,
                  cfg: SolverConfig = SolverConfig(), mesh=None,
                  slots: Optional[int] = None, keep: Optional[int] = None,
-                 chunk_diff: Optional[Callable] = None):
+                 chunk_diff: Optional[Callable] = None, obs=None):
         self.root = pathlib.Path(root)
         self.base_spec = base_spec
         self.make_source = make_source
         self.cfg = cfg
         self.mesh = mesh
         self.slots = slots
+        # Observability bundle (repro.obs.Obs). Default: the shared
+        # no-op. The tracer threads into the solver (refresh spans ride
+        # next to solve.iterate/finalize in one journal) and into every
+        # DecisionService this engine hands out. Never part of the spec
+        # or the solver fingerprint — a traced refresh publishes the
+        # bitwise-identical record (tests/test_obs.py).
+        self.obs = null_obs() if obs is None else obs
         # Delta-refresh hook: (parent_spec, new_spec) -> changed-chunk
         # mask (None = everything changed). Only meaningful with
         # cfg.screening; defaults to the synthetic generators' diff when
@@ -470,7 +478,8 @@ class RefreshEngine:
                 res = solve_streaming_host(
                     source, self.cfg, q=spec.q, lam0=lam0, mesh=self.mesh,
                     slots=self.slots, checkpoint_dir=str(ckdir),
-                    resume_from=str(ckdir), screen_init=screen_init)
+                    resume_from=str(ckdir), screen_init=screen_init,
+                    tracer=self.obs.tracer)
             except ChunkFetchError as e:
                 # Failure containment: the solve exhausted its retry
                 # budget. LIVE.json is untouched (readers keep serving
@@ -513,7 +522,13 @@ class RefreshEngine:
                 record["screen_streamed"] = np.asarray(
                     res.screen["streamed_chunks"], np.int64)
             # Publication step 1: the record lands atomically...
-            ckpt.save(gdir / "record", _RECORD_STEP, record)
+            tracer = self.obs.tracer
+            if tracer.enabled:
+                with tracer.span("refresh.publish", gen=gen_id,
+                                 step="record"):
+                    ckpt.save(gdir / "record", _RECORD_STEP, record)
+            else:
+                ckpt.save(gdir / "record", _RECORD_STEP, record)
         # A re-driven refresh that succeeded clears any failure stamp a
         # previous attempt left: the generation is healthy now.
         failed = gdir / _FAILED
@@ -521,7 +536,12 @@ class RefreshEngine:
             failed.unlink()
         # ...step 2: the pointer flip makes it live. A crash between the
         # two leaves a complete record that recover()/refresh() re-flips.
-        ckpt.write_json(self.root, _POINTER, {"gen": gen_id})
+        tracer = self.obs.tracer
+        if tracer.enabled:
+            with tracer.span("refresh.publish", gen=gen_id, step="pointer"):
+                ckpt.write_json(self.root, _POINTER, {"gen": gen_id})
+        else:
+            ckpt.write_json(self.root, _POINTER, {"gen": gen_id})
         if self.keep is not None:
             self.prune()
         return self.generation(gen_id)
@@ -637,4 +657,5 @@ class RefreshEngine:
                                cache_chunks=cache_chunks,
                                fault_policy=policy_from_cfg(self.cfg),
                                verify=self.cfg.verify_refetch,
-                               fallback=fb, supervisor_root=self.root)
+                               fallback=fb, supervisor_root=self.root,
+                               tracer=self.obs.tracer)

@@ -39,17 +39,23 @@ way ``test_serve_stress.py`` pins the multi-process torn-read story).
 from __future__ import annotations
 
 import base64
+import itertools
 import json
 import os
 import socket
 import struct
 import threading
+import time
 from collections import OrderedDict
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Optional
 from urllib.parse import parse_qs, urlparse
 
 import numpy as np
+
+from ..core.faults import process_registry
+from ..obs import (MetricsRegistry, NULL_TRACER, label_snapshot,
+                   merge_snapshots, render_prometheus, request)
 
 __all__ = ["ReplicaServer", "ReplicaClient", "Front", "FrontRPCError",
            "decision_diff", "pack_array", "unpack_array",
@@ -204,8 +210,13 @@ class ReplicaServer:
     shared root (usually :meth:`RefreshEngine.attach`-ed). Ops:
     ``lookup``, ``decide_batch`` (rows + per-row stale/gen provenance),
     ``diff`` (see :func:`decision_diff`; per-generation services cached
-    under a ``gen_cache``-entry LRU), ``health``, ``ping``,
-    ``shutdown``.
+    under a ``gen_cache``-entry LRU), ``health``, ``metrics`` (merged
+    registry snapshot + Prometheus text), ``ping``, ``shutdown``.
+
+    Requests carrying a front-minted ``rid`` have it installed as the
+    tracing request id for the duration of the dispatch, so a
+    ``serve.fill`` span on this replica correlates with the
+    ``front.decide`` span that caused it.
     """
 
     def __init__(self, engine, index: int = 0, cache_chunks: int = 16,
@@ -217,13 +228,24 @@ class ReplicaServer:
         self.poll_s = float(poll_s)
         self.host, self._port_req = host, int(port)
         self.svc = engine.decision_service(cache_chunks=cache_chunks)
-        self.rebinds = 0
+        # Replica-level metrics live on their own (always-real) registry
+        # so rebind counts survive even when the engine runs without obs;
+        # the tracer comes from the engine so replica spans land in the
+        # same journal as the fills they trigger.
+        self.registry = MetricsRegistry()
+        self._c_rebinds = self.registry.counter("replica_rebinds")
+        self._tracer = engine.obs.tracer
         self._gen_cache_cap = int(gen_cache)
         self._gen_services: OrderedDict = OrderedDict()
         self._gen_lock = threading.Lock()
         self._stop = threading.Event()
         self._sock: Optional[socket.socket] = None
         self._threads: list = []
+
+    @property
+    def rebinds(self) -> int:
+        """Pointer flips this replica has followed (monotone)."""
+        return int(self._c_rebinds.value)
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -262,8 +284,16 @@ class ReplicaServer:
                 live = self.engine.live_gen_id()
                 if live is not None and live != self.svc.generation.gen:
                     gen = self.engine.generation(live)
-                    self.svc.rebind(self.engine.make_source(gen.spec), gen)
-                    self.rebinds += 1
+                    if self._tracer.enabled:
+                        with self._tracer.span("replica.rebind",
+                                               replica=self.index,
+                                               gen=int(live)):
+                            self.svc.rebind(
+                                self.engine.make_source(gen.spec), gen)
+                    else:
+                        self.svc.rebind(
+                            self.engine.make_source(gen.spec), gen)
+                    self._c_rebinds.inc()
             except (ValueError, OSError):
                 # The GC raced this read (vanished generation under a
                 # moving pointer — the documented contract): the next
@@ -301,7 +331,28 @@ class ReplicaServer:
 
     # -- RPC dispatch -------------------------------------------------------
 
+    def metrics_snapshot(self) -> list:
+        """Merged metric snapshot for this replica process.
+
+        Combines the service registry (serve_* series), the replica's
+        own registry (replica_rebinds) and the process-wide fault
+        registry, summed by :func:`~repro.obs.merge_snapshots`.
+        """
+        return merge_snapshots([self.svc.registry.snapshot(),
+                                self.registry.snapshot(),
+                                process_registry().snapshot()])
+
     def _handle(self, req: dict) -> dict:
+        rid = req.get("rid")
+        if rid is not None:
+            # Install the front-minted request id so every span emitted
+            # while answering this request (serve.fill in particular)
+            # carries it — the wire-level correlation contract.
+            with request(str(rid)):
+                return self._dispatch(req)
+        return self._dispatch(req)
+
+    def _dispatch(self, req: dict) -> dict:
         op = req.get("op")
         if op == "ping":
             return {"ok": True, "gen": int(self.svc.generation.gen),
@@ -331,6 +382,10 @@ class ReplicaServer:
                             "rebinds": self.rebinds,
                             "gen_cache": sorted(self._gen_services)}
             return h
+        if op == "metrics":
+            snap = self.metrics_snapshot()
+            return {"replica": self.index, "snapshot": snap,
+                    "text": render_prometheus(snap)}
         if op == "shutdown":
             self._stop.set()
             return {"ok": True}
@@ -440,6 +495,14 @@ class _FrontHandler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(data)
 
+    def _reply_text(self, code: int, text: str) -> None:
+        data = text.encode("utf-8")
+        self.send_response(code)
+        self.send_header("Content-Type", "text/plain; version=0.0.4")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
     def _body(self) -> dict:
         length = int(self.headers.get("Content-Length", 0))
         if length == 0:
@@ -451,6 +514,8 @@ class _FrontHandler(BaseHTTPRequestHandler):
         try:
             if url.path == "/health":
                 self._reply(200, self.front.health())
+            elif url.path == "/metrics":
+                self._reply_text(200, self.front.metrics_text())
             elif url.path == "/decide":
                 user = int(parse_qs(url.query)["user"][0])
                 self._reply(200, self.front.decide(user))
@@ -494,29 +559,49 @@ class Front:
     reports per-replica documents plus an ``agreement`` bit — False
     while a pointer flip is still propagating through the watchers
     (replicas momentarily serve different generations, each one still
-    bitwise-correct for the generation it names).
+    bitwise-correct for the generation it names). ``/metrics`` exports
+    Prometheus text: front counters, per-replica series labeled
+    ``replica="i"``, and an unlabeled fleet aggregate.
     """
 
     def __init__(self, replicas: list, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, tracer=None):
         if not replicas:
             raise ValueError("a front needs at least one replica")
         self.replicas = list(replicas)
         self._rr = 0
         self._lock = threading.Lock()
-        self.stats = {"requests": 0, "rpc_errors": 0, "failovers": 0}
+        self.registry = MetricsRegistry()
+        self._c_requests = self.registry.counter("front_requests")
+        self._c_rpc_errors = self.registry.counter("front_rpc_errors")
+        self._c_failovers = self.registry.counter("front_failovers")
+        self._h_route = self.registry.histogram("front_route_seconds")
+        self._tracer = NULL_TRACER if tracer is None else tracer
+        self._rids = itertools.count()
         self._httpd = ThreadingHTTPServer((host, port), _FrontHandler)
         self._httpd.front = self
         self._thread: Optional[threading.Thread] = None
+
+    @property
+    def stats(self) -> dict:
+        """Routing counters (same keys as the pre-registry dict)."""
+        return {"requests": int(self._c_requests.value),
+                "rpc_errors": int(self._c_rpc_errors.value),
+                "failovers": int(self._c_failovers.value)}
+
+    def _rid(self) -> str:
+        """Mint a request id unique across fronts (pid + monotone seq)."""
+        return f"{os.getpid():x}-{next(self._rids):x}"
 
     # -- replica routing ----------------------------------------------------
 
     def _route(self, req: dict) -> tuple:
         """Round-robin with failover; returns (response, replica index)."""
+        self._c_requests.inc()
         with self._lock:
-            self.stats["requests"] += 1
             start = self._rr
             self._rr = (self._rr + 1) % len(self.replicas)
+        t0 = time.perf_counter()
         last: Optional[Exception] = None
         for k in range(len(self.replicas)):
             i = (start + k) % len(self.replicas)
@@ -525,33 +610,45 @@ class Front:
             except FrontRPCError:
                 raise                        # the op itself failed: surface
             except OSError as e:
-                with self._lock:
-                    self.stats["rpc_errors"] += 1
+                self._c_rpc_errors.inc()
                 last = e
                 continue
             if k:                            # answered by a later choice
-                with self._lock:
-                    self.stats["failovers"] += 1
+                self._c_failovers.inc()
+            self._h_route.observe(time.perf_counter() - t0)
             return resp, i
         raise last
 
     # -- the endpoints (also the in-process client surface) -----------------
 
     def decide(self, user: int) -> dict:
-        resp, i = self._route({"op": "lookup", "user": int(user)})
+        req = {"op": "lookup", "user": int(user), "rid": self._rid()}
+        if self._tracer.enabled:
+            with self._tracer.span("front.decide", op="lookup",
+                                   rid=req["rid"], users=1):
+                resp, i = self._route(req)
+        else:
+            resp, i = self._route(req)
         x = unpack_array(resp["x"])
         return {"user": int(user), "x": [int(v) for v in x],
                 "stale": resp["stale"], "gen": resp["gen"], "replica": i}
 
     def decide_batch(self, users) -> dict:
         users = [int(u) for u in users]
-        resp, i = self._route({"op": "decide_batch", "users": users})
+        req = {"op": "decide_batch", "users": users, "rid": self._rid()}
+        if self._tracer.enabled:
+            with self._tracer.span("front.decide", op="decide_batch",
+                                   rid=req["rid"], users=len(users)):
+                resp, i = self._route(req)
+        else:
+            resp, i = self._route(req)
         return {"users": len(users), "x": resp["x"],
                 "stale": resp["stale"], "gens": resp["gens"], "replica": i}
 
     def diff(self, gen: int, users) -> dict:
         resp, i = self._route({"op": "diff", "gen": int(gen),
-                               "users": [int(u) for u in users]})
+                               "users": [int(u) for u in users],
+                               "rid": self._rid()})
         resp["replica"] = i
         return resp
 
@@ -561,17 +658,36 @@ class Front:
             try:
                 docs.append(rc.call({"op": "health"}))
             except (OSError, FrontRPCError) as e:
-                with self._lock:
-                    self.stats["rpc_errors"] += 1
+                self._c_rpc_errors.inc()
                 docs.append({"error": str(e), "replica": {"index": i}})
         gens = sorted({d["generation"] for d in docs if "generation" in d})
-        with self._lock:
-            front = dict(self.stats)
+        front = dict(self.stats)
         front["replicas"] = len(self.replicas)
         return {"replicas": docs, "generations": gens,
                 "agreement": len(gens) == 1,
                 "ok": all("error" not in d for d in docs),
                 "front": front}
+
+    def metrics_text(self) -> str:
+        """Prometheus text for the fleet: the front's own series, each
+        replica's series stamped ``replica="i"``, and an unlabeled
+        aggregate summed across the replicas that answered (the same
+        fan-out-and-tolerate shape as :meth:`health` — unreachable
+        replicas count an rpc_error and drop out of the aggregate).
+        """
+        series = list(self.registry.snapshot())
+        per_replica = []
+        for i, rc in enumerate(self.replicas):
+            try:
+                snap = rc.call({"op": "metrics"})["snapshot"]
+            except (OSError, FrontRPCError):
+                self._c_rpc_errors.inc()
+                continue
+            per_replica.append(snap)
+            series.extend(label_snapshot(snap, replica=str(i)))
+        if per_replica:
+            series.extend(merge_snapshots(per_replica))
+        return render_prometheus(series)
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -586,7 +702,13 @@ class Front:
         return self.address
 
     def shutdown(self) -> None:
-        self._httpd.shutdown()
+        # Only stop the serve loop if one is running: socketserver's
+        # shutdown() waits on a flag that serve_forever sets on exit,
+        # so calling it on a never-started front would block forever.
+        if self._thread is not None:
+            self._httpd.shutdown()
+            self._thread.join()
+            self._thread = None
         self._httpd.server_close()
         for rc in self.replicas:
             rc.close()

@@ -452,6 +452,39 @@ def test_degraded_lookup_without_fallback_raises(tmp_path):
     assert not h["degraded"] and h["fallback_generation"] is None
 
 
+def test_degraded_clears_on_rebind_to_healed_generation(tmp_path):
+    """``degraded`` is the *current* binding's state, not history: a
+    rebind onto a generation with healthy storage reports healthy
+    again, while the monotone ``stale_serves`` tally keeps the record
+    of what happened (the recovery-transition regression)."""
+    eng, g0, g1 = _two_generations(tmp_path)
+    dead = FaultPlan(seed=0, offenders=tuple(range(8)),
+                     offender_failures=10 ** 6)
+
+    def make(spec):
+        src = synthetic_source(spec)
+        return faulty_source(src, dead) if spec == g1.spec else src
+
+    cfg_retry = CFG.replace(fetch_retries=1, fetch_backoff=1e-5,
+                            fetch_backoff_cap=1e-4)
+    eng2 = RefreshEngine(tmp_path, SPEC, make_source=make, cfg=cfg_retry)
+    svc = eng2.decision_service()
+    assert svc.lookup(17).stale
+    h = svc.health()
+    assert h["degraded"] and h["stale_serves"] >= 1
+    stale_before = h["stale_serves"]
+
+    # Publish a healed generation and follow the pointer flip.
+    g2 = eng2.refresh(budget_scale=0.85)
+    svc.rebind(synthetic_source(g2.spec), g2)
+    res = svc.lookup(17)
+    assert not res.stale and res.gen == g2.gen
+    h = svc.health()
+    assert not h["degraded"]                    # current binding: healthy
+    assert h["stale_serves"] == stale_before    # history: preserved
+    assert h["generation"] == g2.gen and h["fallback_generation"] == g1.gen
+
+
 def test_healthy_lookups_are_never_marked_stale(tmp_path):
     eng, g0, g1 = _two_generations(tmp_path)
     svc = eng.decision_service()

@@ -18,7 +18,11 @@ slot count), the ratio check is trivially satisfied and any drift in
 either total is reported as a note. For front reports
 (``BENCH_front.json``, tagged ``"bench": "front"``), bitwise HTTP
 answer parity and the diff endpoint's deterministic chunk-fill profile
-are absolute, and sustained batched QPS is gated within ``--tol``.
+are absolute, and sustained batched QPS is gated within ``--tol``. For
+obs reports (``BENCH_obs.json``, tagged ``"bench": "obs"``), bitwise
+obs-on/off parity and the expected span counts are absolute, and the
+enabled-path overhead fraction is gated within an *additive* ``--tol``
+of the committed measurement.
 
 Otherwise the report is a ``BENCH_stream_passes.json`` (the CI smoke
 run) compared against the committed one, matching points by ``n``:
@@ -139,6 +143,46 @@ def diff_front(committed: dict, current: dict, tol: float) -> list:
     return problems
 
 
+def diff_obs(committed: dict, current: dict, tol: float) -> list:
+    """Obs-report violations: bitwise parity and span shape are
+    absolute, the enabled-path overhead is wall-gated.
+
+    The instrumented solve must stay bitwise-identical to the
+    uninstrumented one and the expected span counts must have fired
+    (``spans_ok`` — a tracer that silently stopped emitting cannot
+    pass). The enabled-path overhead fraction must stay within an
+    absolute ``tol`` of the committed measurement (overheads are small
+    ratios of noisy walls, so the slack is additive, not relative):
+    committed 2% with ``tol`` 0.25 still fails a 30% current."""
+    problems = []
+    base = _points_by_n(committed)
+    new = _points_by_n(current)
+    shared = sorted(set(base) & set(new))
+    if not shared:
+        return [f"no shared n between committed {sorted(base)} and "
+                f"current {sorted(new)}"]
+    for n in shared:
+        ref, cur = base[n], new[n]
+        if not cur["identical"]:
+            problems.append(
+                f"n={n}: obs-on solve no longer bitwise-identical to the "
+                "obs-off solve")
+            continue
+        if not cur["spans_ok"]:
+            problems.append(
+                f"n={n}: expected span counts missing "
+                f"(spans={cur['spans']})")
+        if cur["overhead_on"] > ref["overhead_on"] + tol:
+            problems.append(
+                f"n={n}: obs-on overhead {ref['overhead_on']} -> "
+                f"{cur['overhead_on']} (> +{tol} absolute regression)")
+        if cur["overhead_null"] > ref["overhead_null"] + tol:
+            problems.append(
+                f"n={n}: null-path overhead {ref['overhead_null']} -> "
+                f"{cur['overhead_null']} (> +{tol} absolute regression)")
+    return problems
+
+
 def diff_screening(committed: dict, current: dict, tol: float) -> list:
     """Screening-report violations: oracle parity is absolute, the
     streamed-item reduction is the gated payoff.
@@ -190,7 +234,7 @@ def diff_screening(committed: dict, current: dict, tol: float) -> list:
 def diff(committed: dict, current: dict, tol: float) -> list:
     """Return a list of human-readable violations (empty = gate passes)."""
     for kind, fn in (("serve", diff_serve), ("screening", diff_screening),
-                     ("front", diff_front)):
+                     ("front", diff_front), ("obs", diff_obs)):
         if committed.get("bench") == kind or current.get("bench") == kind:
             if committed.get("bench") != current.get("bench"):
                 return [f"report kind mismatch: committed "

@@ -1,0 +1,96 @@
+"""Per-phase wall-time summary for obs trace journals.
+
+``python tools/trace_view.py TRACE [TRACE...] [--assert-phases a,b,c]``
+
+Each ``TRACE`` is either a ``*.jsonl`` span journal written by
+:class:`repro.obs.Tracer` or a directory (a run root or its ``obs/``
+subdirectory) whose journals are collected recursively. Journals are
+read with the torn-tail-tolerant reader — a SIGKILLed writer's last
+partial line is skipped, mid-file corruption is a hard error.
+
+The summary groups spans by phase: count, total/mean/max duration and
+the share of the summed wall time. ``--assert-phases`` turns the viewer
+into a CI gate: a comma-separated phase list that must all appear in
+the collected spans, exiting 1 (with the missing names) otherwise —
+the cheap "did the instrumentation actually fire" check layered under
+the bench parity gate.
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs import read_trace  # noqa: E402
+
+
+def collect(paths):
+    """All span records from files/directories, with journal count."""
+    files = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.jsonl")))
+        else:
+            files.append(p)
+    spans = []
+    for f in files:
+        spans.extend(read_trace(f))
+    return spans, len(files)
+
+
+def summarise(spans):
+    """phase -> {count, total_s, mean_s, max_s} over span records."""
+    by_phase = {}
+    for s in spans:
+        d = by_phase.setdefault(s["phase"],
+                                {"count": 0, "total_s": 0.0, "max_s": 0.0})
+        dur = float(s.get("dur_s", 0.0))
+        d["count"] += 1
+        d["total_s"] += dur
+        d["max_s"] = max(d["max_s"], dur)
+    for d in by_phase.values():
+        d["mean_s"] = d["total_s"] / d["count"]
+    return by_phase
+
+
+def render(by_phase) -> str:
+    grand = sum(d["total_s"] for d in by_phase.values()) or 1.0
+    lines = [f"{'phase':<18} {'count':>7} {'total_s':>10} "
+             f"{'mean_s':>10} {'max_s':>10} {'share':>7}"]
+    for phase in sorted(by_phase, key=lambda p: -by_phase[p]["total_s"]):
+        d = by_phase[phase]
+        lines.append(f"{phase:<18} {d['count']:>7} {d['total_s']:>10.4f} "
+                     f"{d['mean_s']:>10.6f} {d['max_s']:>10.6f} "
+                     f"{d['total_s'] / grand:>6.1%}")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("traces", nargs="+",
+                    help="trace journal files or directories")
+    ap.add_argument("--assert-phases", default=None,
+                    help="comma-separated phases that must appear "
+                         "(exit 1 on any missing)")
+    args = ap.parse_args()
+
+    spans, nfiles = collect(args.traces)
+    by_phase = summarise(spans)
+    print(f"{len(spans)} spans from {nfiles} journal(s)")
+    if by_phase:
+        print(render(by_phase))
+
+    if args.assert_phases:
+        want = [p.strip() for p in args.assert_phases.split(",")
+                if p.strip()]
+        missing = [p for p in want if p not in by_phase]
+        if missing:
+            print(f"MISSING phases: {', '.join(missing)}", file=sys.stderr)
+            return 1
+        print(f"all {len(want)} asserted phases present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
